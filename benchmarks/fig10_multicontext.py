@@ -1,0 +1,67 @@
+"""Paper Fig. 10 / §5.2: multi-context optimization.
+
+Optimizes the accelerator for the interleaved Inception-v3 + PTB stream
+and compares the resulting top-10% radar against the radars of the two
+individual applications.  Validation targets:
+
+  * the multi-context radar is NOT a simple union of the two individual
+    radars;
+  * #MACs demand is below inception's own optimum (compute pressure is
+    relieved by interleaved memory-bound PTB layers);
+  * loop-tiling sizes are below ptb's own optimum (memory pressure shared
+    with compute-bound inception layers).
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.core.apps import inception_v3, multi_context, ptb_lstm
+from repro.core.multiapp import AppSpec
+from repro.core.sensitivity import radar_of_top_configs
+from repro.core.space import default_space
+
+OUT = Path(__file__).resolve().parents[1] / "experiments" / "paper"
+
+
+def run(k: int = 3, restarts: int = 3, seed: int = 0, max_rounds: int = 25,
+        verbose: bool = True) -> dict:
+    space = default_space()
+    cases = {
+        "inception": inception_v3(),
+        "ptb": ptb_lstm(),
+        "multi_context": multi_context(),
+    }
+    radars = {}
+    for name, graph in cases.items():
+        spec = AppSpec.from_graph(name, graph)
+        radars[name] = radar_of_top_configs(name, spec, space, k=k,
+                                            restarts=restarts, seed=seed,
+                                            max_rounds=max_rounds)
+
+    macs = {n: r.values["pe_group"] + r.values["mac_per_group"]
+            for n, r in radars.items()}
+    tiles = {n: sum(r.values[v] for v in ("tif", "tix", "tiy", "tof")) / 4
+             for n, r in radars.items()}
+    checks = {
+        "mc_macs_below_inception": bool(
+            macs["multi_context"] <= macs["inception"] + 0.1),
+        "mc_tiles_below_ptb": bool(
+            tiles["multi_context"] <= tiles["ptb"] + 0.1),
+    }
+    rec = {"radars": {n: r.values for n, r in radars.items()},
+           "macs_pressure": macs, "tile_pressure": tiles, "checks": checks}
+    if verbose:
+        for r in radars.values():
+            print(r.fmt())
+        print("macs pressure:", {k: f"{v:.2f}" for k, v in macs.items()})
+        print("tile pressure:", {k: f"{v:.2f}" for k, v in tiles.items()})
+        print("checks:", checks)
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "fig10_multicontext.json").write_text(json.dumps(rec, indent=2))
+    return rec
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,136 @@
+"""§Perf: hypothesis -> change -> measure -> validate hillclimbs on the
+three most interesting (arch x shape) pairs (baselines for all 40 cells are
+in benchmarks/roofline_table.py).
+
+Pairs (chosen from the baseline table; see EXPERIMENTS.md §Perf):
+  1. qwen2.5-32b x train_4k   — flagship dense training; worst absolute gap
+                                to the compute roofline (coll 33 s vs
+                                comp 5.1 s), most paper-representative.
+  2. olmoe-1b-7b x train_4k   — most collective-bound (coll/comp ~ 19x):
+                                MoE dispatch + FSDP gathers.
+  3. xlstm-1.3b x decode_32k  — collective-bound *decode* (a recurrent-state
+                                layout pathology; decode should be purely
+                                memory-bound).
+
+Each pair runs the paper's multi-step greedy (k=1, memoized compiles) over
+the TPU execution space (core/autotune.py), then the scripted
+hypothesis-driven probes below.  Every evaluation is recorded to
+experiments/autotune/<cell>/ and summarized to experiments/perf_hillclimb.json.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+
+from repro.core.autotune import CellEvaluator, ExecPoint, greedy_autotune
+
+OUT = Path(__file__).resolve().parents[1] / "experiments"
+
+# Baselines = the exact configs the 40-cell sweep used.
+PAIRS = [
+    {
+        "arch": "qwen2.5-32b", "shape": "train_4k", "mode": "train",
+        "moe": False,
+        "baseline": ExecPoint(sharding_mode="fsdp", remat="full",
+                              microbatches=16),
+        # hypothesis-driven probes (napkin math in EXPERIMENTS.md §Perf)
+        "probes": {
+            "H1_tp_no_fsdp_gathers": ExecPoint(
+                sharding_mode="tp", remat="full", microbatches=16),
+            "H2_fewer_microbatches": ExecPoint(
+                sharding_mode="fsdp", remat="full", microbatches=4),
+            "H3_remat_dots": ExecPoint(
+                sharding_mode="fsdp", remat="dots", microbatches=16),
+            "H4_tp_mb4": ExecPoint(
+                sharding_mode="tp", remat="full", microbatches=4),
+        },
+    },
+    {
+        "arch": "olmoe-1b-7b", "shape": "train_4k", "mode": "train",
+        "moe": True,
+        "baseline": ExecPoint(sharding_mode="fsdp", remat="full",
+                              microbatches=2),
+        "probes": {
+            "H1_bigger_moe_groups": ExecPoint(
+                sharding_mode="fsdp", remat="full", microbatches=2,
+                moe_group_size=8192),
+            "H2_smaller_moe_groups": ExecPoint(
+                sharding_mode="fsdp", remat="full", microbatches=2,
+                moe_group_size=2048),
+            "H3_tp_params": ExecPoint(
+                sharding_mode="tp", remat="full", microbatches=2),
+            "H4_mb1": ExecPoint(
+                sharding_mode="fsdp", remat="full", microbatches=1),
+        },
+    },
+    {
+        "arch": "xlstm-1.3b", "shape": "decode_32k", "mode": "decode",
+        "moe": False,
+        "baseline": ExecPoint(sharding_mode="tp", remat="none",
+                              microbatches=1),
+        "probes": {
+            "H1_shard_mlstm_state": ExecPoint(
+                sharding_mode="tp", remat="none", microbatches=1,
+                extra_rules=(("mlstm_state", "model"),)),
+        },
+    },
+]
+
+
+def run(max_rounds: int = 4, verbose: bool = True) -> dict:
+    results = {}
+    for pair in PAIRS:
+        cell = f"{pair['arch']}_{pair['shape']}"
+        ev = CellEvaluator(pair["arch"], pair["shape"], multi_pod=False)
+        entry = {"baseline": None, "probes": {}, "greedy": {}}
+
+        base_score = ev.score(pair["baseline"])
+        base_rec = ev.evaluate(pair["baseline"])
+        entry["baseline"] = {
+            "point": dataclasses.asdict(pair["baseline"]),
+            "score": base_score,
+            "roofline": base_rec.get("roofline"),
+        }
+        if verbose:
+            print(f"[{cell}] baseline score={base_score:.4f} "
+                  f"(1/roofline_s)")
+
+        for name, pt in pair["probes"].items():
+            sc = ev.score(pt)
+            rec = ev.evaluate(pt)
+            entry["probes"][name] = {
+                "point": dataclasses.asdict(pt), "score": sc,
+                "roofline": rec.get("roofline"),
+                "vs_baseline": (sc / base_score - 1.0) if base_score else 0.0,
+            }
+            if verbose:
+                d = entry["probes"][name]["vs_baseline"]
+                print(f"[{cell}] {name}: score={sc:.4f} ({d:+.1%})")
+
+        log: list = []
+        best_pt, best_score = greedy_autotune(
+            ev, shape_mode=pair["mode"], has_moe=pair["moe"],
+            seed=0, max_rounds=max_rounds, init=pair["baseline"], log=log)
+        entry["greedy"] = {
+            "best_point": dataclasses.asdict(best_pt),
+            "best_score": best_score,
+            "vs_baseline": (best_score / base_score - 1.0)
+            if base_score else 0.0,
+            "n_compiles": ev.n_compiles,
+            "log": log,
+        }
+        if verbose:
+            print(f"[{cell}] greedy best={best_score:.4f} "
+                  f"({entry['greedy']['vs_baseline']:+.1%}) "
+                  f"compiles={ev.n_compiles}")
+        results[cell] = entry
+
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "perf_hillclimb.json").write_text(json.dumps(results, indent=2))
+    return results
+
+
+if __name__ == "__main__":
+    run()

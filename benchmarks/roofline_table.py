@@ -1,0 +1,62 @@
+"""§Roofline: the full 40-cell x 2-mesh baseline table from the dry-run
+artifacts (experiments/dryrun/*.json)."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro import configs
+from repro.configs.shapes import SHAPES
+
+DRYRUN = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_cells(mesh: str = "16x16") -> dict:
+    out = {}
+    for arch in configs.ARCH_NAMES:
+        for shape in SHAPES:
+            p = DRYRUN / f"{arch}_{shape.name}_{mesh}.json"
+            if p.exists():
+                out[(arch, shape.name)] = json.loads(p.read_text())
+    return out
+
+
+def fmt_table(mesh: str = "16x16") -> str:
+    cells = load_cells(mesh)
+    lines = [f"# roofline baselines — mesh {mesh} "
+             f"(seconds; bottleneck = max term)",
+             f"{'arch':22s} {'shape':12s} {'compute_s':>10s} "
+             f"{'memory_s':>10s} {'collect_s':>10s} {'bottleneck':>10s} "
+             f"{'useful':>7s} {'peakGB':>7s} {'fits':>5s}"]
+    for (arch, shape), rec in sorted(cells.items()):
+        if rec["status"] == "SKIPPED":
+            lines.append(f"{arch:22s} {shape:12s} "
+                         f"{'—':>10s} {'—':>10s} {'—':>10s} "
+                         f"{'SKIPPED':>10s} {'—':>7s} {'—':>7s} {'—':>5s}")
+            continue
+        r = rec["roofline"]
+        lines.append(
+            f"{arch:22s} {shape:12s} {r['compute_s']:10.4f} "
+            f"{r['memory_s']:10.4f} {r['collective_s']:10.4f} "
+            f"{r['bottleneck']:>10s} {r['useful_compute_ratio']:7.1%} "
+            f"{r['peak_memory_per_chip']/1e9:7.2f} "
+            f"{'Y' if rec.get('fits_hbm') else 'N':>5s}")
+    return "\n".join(lines)
+
+
+def run(verbose: bool = True) -> dict:
+    tables = {m: fmt_table(m) for m in ("16x16", "2x16x16")}
+    if verbose:
+        for m, t in tables.items():
+            print(t)
+            print()
+    out = DRYRUN.parent / "roofline_table.txt"
+    out.write_text("\n\n".join(tables.values()) + "\n")
+    n_ok = sum(1 for rec in load_cells("16x16").values()
+               if rec["status"] == "OK")
+    return {"cells_16x16_ok": n_ok, "written": str(out)}
+
+
+if __name__ == "__main__":
+    run()

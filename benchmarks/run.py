@@ -1,0 +1,91 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows per the scaffold contract,
+followed by each experiment's own summary.  Heavy compile-based benches
+(perf_hillclimb) are gated behind --full; the default set completes in a
+few minutes on CPU.
+
+  table4_5    — §5.1 multi-application DSE + geomean selection (Tables 4-5)
+  fig10       — §5.2 multi-context (inception+ptb) optimization
+  fig11       — §5.3 four-step Faster-R-CNN sensitivity analysis
+  costmodel   — §3 analytical-model validation (exact loop-nest simulation)
+  roofline    — §Roofline 40-cell baseline table (reads the dry-run JSONs)
+  kernels     — Pallas kernel microbenches + tile-model predictions
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _timed(name, fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    us = (time.time() - t0) * 1e6
+    return name, us, out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="include the compile-heavy perf hillclimbs")
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced DSE budgets (CI mode)")
+    args = ap.parse_args()
+
+    from benchmarks import (costmodel_validation, fig10_multicontext,
+                            fig11_sensitivity, kernel_bench, roofline_table,
+                            table4_5_geomean)
+
+    budget = dict(restarts=2, max_rounds=12) if args.quick else {}
+    rows = []
+
+    name, us, rec = _timed("table4_5_geomean",
+                           table4_5_geomean.run, verbose=True, **budget)
+    rows.append((name, us,
+                 f"selected_beats_all="
+                 f"{rec['selected_beats_all_per_app_bests']}"))
+
+    name, us, rec = _timed("fig10_multicontext",
+                           fig10_multicontext.run, verbose=True, **budget)
+    rows.append((name, us, f"checks_pass={all(rec['checks'].values())}"))
+
+    name, us, rec = _timed("fig11_sensitivity",
+                           fig11_sensitivity.run, verbose=True, **budget)
+    rows.append((name, us, f"checks_pass={all(rec['checks'].values())}"))
+
+    name, us, rec = _timed("costmodel_validation",
+                           costmodel_validation.run, verbose=True)
+    rows.append((name, us,
+                 f"exact={rec['compute_cycles_exact_matches']}/"
+                 f"{rec['n_cases']}"))
+
+    name, us, rec = _timed("roofline_table", roofline_table.run,
+                           verbose=True)
+    rows.append((name, us, f"cells_ok={rec['cells_16x16_ok']}"))
+
+    t0 = time.time()
+    krows = kernel_bench.run(verbose=False)
+    rows.append(("kernel_bench", (time.time() - t0) * 1e6,
+                 f"{len(krows)}_kernels"))
+    rows.extend(krows)
+
+    if args.full:
+        from benchmarks import perf_hillclimb, tpu_geomean
+        name, us, rec = _timed("perf_hillclimb", perf_hillclimb.run,
+                               verbose=True)
+        gains = {c: f"{v['greedy']['vs_baseline']:+.1%}"
+                 for c, v in rec.items()}
+        rows.append((name, us, f"gains={gains}"))
+        name, us, rec = _timed("tpu_geomean", tpu_geomean.run, verbose=True)
+        rows.append((name, us, f"selected={rec['selected']}"))
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

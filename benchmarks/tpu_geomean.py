@@ -1,0 +1,66 @@
+"""Beyond-paper: the §5.1 multi-application geomean selection, run on the
+TPU *execution* space across all ten assigned architectures.
+
+The paper picks one accelerator for seven DNNs; here we pick one execution
+configuration (sharding mode / remat / tiles) for ten architectures'
+train_4k cells, scored by 1/roofline_s from compiled dry-runs.  Like the
+paper's Table 4, the per-arch-best configuration is rarely the fleet-wide
+best: a memory-tight arch needs remat=full where a loose one prefers
+remat=dots.
+
+Compile-heavy (#points x 10 archs): results memoized under
+experiments/autotune/.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro import configs
+from repro.core.autotune import CellEvaluator, ExecPoint, \
+    select_geomean_config
+from repro.launch.dryrun import DEFAULT_MICROBATCHES
+
+OUT = Path(__file__).resolve().parents[1] / "experiments"
+
+# candidate fleet-wide execution configs (microbatches stay per-arch —
+# they are a capacity knob, not a preference knob)
+POINTS = {
+    "fsdp_full": dict(sharding_mode="fsdp", remat="full"),
+    "fsdp_dots": dict(sharding_mode="fsdp", remat="dots"),
+    "fsdp_dots_kv512": dict(sharding_mode="fsdp", remat="dots",
+                            attn_kv_block=512),
+}
+
+
+def run(verbose: bool = True) -> dict:
+    records: dict = {k: {} for k in POINTS}
+    for arch in configs.ARCH_NAMES:
+        mb = DEFAULT_MICROBATCHES.get(arch, 1)
+        ev = CellEvaluator(arch, "train_4k", multi_pod=False)
+        for key, kw in POINTS.items():
+            pt = ExecPoint(microbatches=mb, **kw)
+            records[key][arch] = ev.score(pt)
+            if verbose:
+                print(f"{arch:22s} {key:18s} score={records[key][arch]:.4f}")
+
+    best_key, best_geo = select_geomean_config(records)
+    per_arch_best = {a: max(records, key=lambda k: records[k][a])
+                     for a in configs.ARCH_NAMES}
+    rec = {"scores": records, "selected": best_key,
+           "selected_geomean": best_geo, "per_arch_best": per_arch_best}
+    if verbose:
+        print(f"\nselected fleet-wide config: {best_key} "
+              f"(geomean {best_geo:.4f})")
+        print("per-arch bests:", per_arch_best)
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "tpu_geomean.json").write_text(json.dumps(rec, indent=2))
+    return rec
+
+
+if __name__ == "__main__":
+    run()

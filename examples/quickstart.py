@@ -1,0 +1,43 @@
+"""Quickstart: the paper's DSE framework in ~1 minute on CPU.
+
+1. Build a DNN computation graph (ResNet-50), analyze it (§4.2).
+2. Run the multi-step greedy DSE (§4.3) for an accelerator config.
+3. Re-target the SAME optimizer at a TPU kernel tile space (§2.2 of
+   DESIGN.md) — the "software-defined" part.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core import apps
+from repro.core.greedy import multi_step_greedy
+from repro.core.kernel_tune import tune_matmul_tiles
+from repro.core.multiapp import AppSpec
+from repro.core.space import default_space
+
+# -- 1. application analysis ------------------------------------------------
+graph = apps.resnet_v1_50()
+summary = graph.summary()
+print(f"ResNet-50: {summary['n_ops']} compute ops, "
+      f"{summary['total_macs']/1e9:.2f} GMACs, "
+      f"peak activations {summary['peak_input_memory_bytes']/1e6:.2f} MB, "
+      f"peak weights {summary['peak_weight_memory_bytes']/1e6:.2f} MB")
+
+# -- 2. accelerator design space exploration (Algorithm 1) -------------------
+spec = AppSpec.from_graph("resnet", graph)
+space = default_space()
+res = multi_step_greedy(spec.stream, space, k=3, seed=0, max_rounds=20,
+                        peak_input_bits=spec.peak_input_bits, patience=3)
+print(f"\nDSE: {len(res.evaluated)} configs evaluated, "
+      f"best = {res.best_perf:.0f} GOPS under area "
+      f"{res.best.area(space.hw):.0f} / {space.area_budget:.0f}")
+print("best config:", {k: v for k, v in res.best.asdict().items()
+                       if k in ("pe_group", "mac_per_group", "tif", "tix",
+                                "tiy", "tof", "loop_order")})
+
+# -- 3. the same optimization idea on a TPU kernel tile space ----------------
+best, cost, _ = tune_matmul_tiles(8192, 8192, 8192)
+print(f"\nTPU matmul tile DSE (8k^3 bf16): best tile "
+      f"(bm,bk,bn)=({best.bm},{best.bk},{best.bn}) "
+      f"-> {cost['latency_s']*1e3:.2f} ms predicted on v5e "
+      f"({'compute' if cost['compute_s']>=cost['memory_s'] else 'memory'}"
+      f"-bound, VMEM {cost['vmem_bytes']/2**20:.1f} MiB)")

@@ -1,0 +1,587 @@
+"""Analytical hardware cost model for DNN operations (paper §3).
+
+Implements the paper's extension of the Ma et al. [1] 2-D convolution
+analytical model with batch processing:
+
+  * data-reuse factors           — Eqs. (1)-(2)
+  * compute latency              — Eqs. (3)-(4)  (inter-tiling x inner-tiling)
+  * memory-transfer latency      — Eqs. (5)-(8)
+  * total latency                — max(compute, memory)
+  * Table 1 parameter embeddings — depthwise conv, channel mixing,
+                                   matrix-vector and matrix-matrix multiply
+  * optional finer-grained buffer simulator (§3, "computational blocks")
+
+Everything is vectorized over *operation streams* (struct-of-arrays) and,
+where needed, over *configurations* as well, so the multi-step greedy
+optimizer (core/greedy.py) can sweep thousands of candidate configurations
+per second on CPU.
+
+Conventions:
+  * all memory quantities in **bits** unless suffixed `_bytes`
+  * `S` is the sliding stride; `batch` the input batch size
+  * an operation is the canonical 9-tuple of loop bounds
+    (Nif, Nix, Niy, Nkx, Nky, Nof, Nox, Noy, S) plus `batch`
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "OpKind",
+    "Op",
+    "OpStream",
+    "HardwareConstants",
+    "AccelConfig",
+    "LatencyBreakdown",
+    "evaluate_stream",
+    "evaluate_stream_many",
+    "BufferSimulator",
+]
+
+
+class OpKind(enum.Enum):
+    """DNN operation kinds covered by the cost model (paper Table 1)."""
+
+    CONV2D = "conv2d"
+    DEPTHWISE_CONV = "depthwise_conv"
+    CHANNEL_MIXING = "channel_mixing"
+    MATVEC = "matvec"
+    MATMUL = "matmul"
+
+
+@dataclasses.dataclass(frozen=True)
+class Op:
+    """One DNN operation in canonical 2-D-convolution coordinates.
+
+    The Table 1 embeddings are provided as constructors so that every
+    compute-intensive op is expressed in the *same* 9 loop bounds and can be
+    costed by one model.
+    """
+
+    kind: OpKind
+    nif: int
+    nix: int
+    niy: int
+    nkx: int
+    nky: int
+    nof: int
+    nox: int
+    noy: int
+    s: int = 1
+    batch: int = 1
+    name: str = ""
+    # Number of *logical* instances this canonical op stands for.  Depthwise
+    # convolution is embedded with Nof=1 (paper Table 1) and therefore
+    # repeats once per channel: repeat = Nif of the original depthwise layer.
+    repeat: int = 1
+
+    # ---------------------------------------------------------- constructors
+    @staticmethod
+    def conv2d(nif: int, nix: int, niy: int, nkx: int, nky: int, nof: int,
+               s: int = 1, batch: int = 1, name: str = "") -> "Op":
+        nox = (nix - nkx) // s + 1
+        noy = (niy - nky) // s + 1
+        return Op(OpKind.CONV2D, nif, nix, niy, nkx, nky, nof,
+                  max(nox, 1), max(noy, 1), s, batch, name)
+
+    @staticmethod
+    def depthwise(nif: int, nix: int, niy: int, nkx: int, nky: int,
+                  s: int = 1, batch: int = 1, name: str = "") -> "Op":
+        """Depthwise conv == 2-D conv with #filter kernels = 1 (Table 1 row 2).
+
+        The single-channel convolution repeats across the `nif` channels; we
+        keep `repeat = nif` and cost a per-channel op with Nif = 1 so the
+        arithmetic matches a true depthwise layer.
+        """
+        nox = (nix - nkx) // s + 1
+        noy = (niy - nky) // s + 1
+        return Op(OpKind.DEPTHWISE_CONV, 1, nix, niy, nkx, nky, 1,
+                  max(nox, 1), max(noy, 1), s, batch, name, repeat=nif)
+
+    @staticmethod
+    def channel_mixing(nif: int, nix: int, niy: int, nof: int,
+                       s: int = 1, batch: int = 1, name: str = "") -> "Op":
+        """1x1 convolution across channels (Table 1 row 3)."""
+        nox = (nix - 1) // s + 1
+        noy = (niy - 1) // s + 1
+        return Op(OpKind.CHANNEL_MIXING, nif, nix, niy, 1, 1, nof,
+                  nox, noy, s, batch, name)
+
+    @staticmethod
+    def matvec(col: int, row: int, batch: int = 1, name: str = "") -> "Op":
+        """Matrix-vector multiply (Table 1 row 4).
+
+        Nif=col, Nix=row, Niy=1, Nkx=Nky=1, Nof=1, Nox=row, Noy=1, S=1.
+        """
+        return Op(OpKind.MATVEC, col, row, 1, 1, 1, 1, row, 1, 1, batch, name)
+
+    @staticmethod
+    def matmul(col1: int, row1: int, col2: int, batch: int = 1,
+               name: str = "") -> "Op":
+        """Matrix-matrix multiply (Table 1 row 5).
+
+        [row1 x col1] @ [col1 x col2]:
+        Nif=col_1, Nix=row_1, Niy=1, Nkx=Nky=1, Nof=col_2, Nox=row_1, Noy=1.
+        """
+        return Op(OpKind.MATMUL, col1, row1, 1, 1, 1, col2, row1, 1, 1,
+                  batch, name)
+
+    # ------------------------------------------------------------ properties
+    @property
+    def macs(self) -> int:
+        """N_MAC = Nif x Nkx x Nky x Nox x Noy x Nof (per batch element)."""
+        return (self.nif * self.nkx * self.nky * self.nox * self.noy
+                * self.nof * self.repeat)
+
+    @property
+    def weight_elems(self) -> int:
+        return self.nif * self.nkx * self.nky * self.nof * self.repeat
+
+    @property
+    def input_elems(self) -> int:
+        return self.nif * self.nix * self.niy * self.repeat
+
+    @property
+    def output_elems(self) -> int:
+        return self.nof * self.nox * self.noy * self.repeat
+
+
+class OpStream:
+    """Struct-of-arrays view over a sequence of `Op`s for vectorized costing."""
+
+    FIELDS = ("nif", "nix", "niy", "nkx", "nky", "nof", "nox", "noy", "s",
+              "batch", "repeat")
+
+    def __init__(self, ops: Sequence[Op]):
+        self.ops = list(ops)
+        n = len(self.ops)
+        for f in self.FIELDS:
+            setattr(self, f,
+                    np.asarray([getattr(op, f) for op in self.ops],
+                               dtype=np.int64).reshape(1, n))
+
+    def __len__(self) -> int:
+        return len(self.ops)
+
+    @property
+    def total_macs(self) -> int:
+        return int(sum(op.macs * op.batch for op in self.ops))
+
+    @property
+    def total_ops(self) -> int:
+        """Total arithmetic operations (1 MAC = 2 ops)."""
+        return 2 * self.total_macs
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareConstants:
+    """Technology constants for the unit-area model and timing (paper §4.3)."""
+
+    frequency_hz: float = 1.0e9          # accelerator clock
+    bit_width: int = 8                   # quantized datapath (cf. [7])
+    # unit-area model: "unit area for each component ... scaled according to
+    # the architectural configuration"
+    area_per_mac: float = 1.0
+    # 28 nm: an 8-bit MAC ~ 700 um^2, 6T SRAM ~ 0.12 um^2/bit -> ~1.7e-4
+    area_per_sram_bit: float = 1.7e-4
+    area_per_group_ctrl: float = 8.0
+    area_per_mac_regfile: float = 0.2
+    # off-chip transfer setup latency charged per computational block by the
+    # optional buffer simulator (cycles)
+    offchip_burst_setup: int = 64
+    offchip_words_per_cycle: int = 16
+
+
+# Loop-order dataflows (Table 2 `loop_order`).  The execution order of the
+# six convolution loops determines how often tiles are *re*-fetched from
+# off-chip memory (cf. Ma et al. [1] §4).  We expose the four canonical
+# orders; `PAPER` is the order the paper's Eqs. (5)-(8) assume (each weight /
+# input word is fetched once per use and discounted by the reuse factors).
+class LoopOrder(enum.IntEnum):
+    PAPER = 0              # Eqs. (5)-(8) verbatim
+    WEIGHT_STATIONARY = 1  # weight tiles resident; inputs streamed per tile
+    OUTPUT_STATIONARY = 2  # output tile resident; inputs+weights streamed
+    INPUT_STATIONARY = 3   # input tiles resident; weights streamed per tile
+
+
+@dataclasses.dataclass(frozen=True)
+class AccelConfig:
+    """One point in the accelerator design space (paper Table 2 + §2.2 P*).
+
+    Design variables:
+      loop_order            execution order of the convolution loops
+      pe_group              number of PE groups
+      mac_per_group         MACs per PE group
+      bank_height           buffer bank height (words)
+      bank_width            buffer bank width (bits)
+      weight_banks_pg       weight buffer banks per PE group
+      act_banks_pg          activation buffer banks per PE group
+      tif, tix, tiy, tof    loop-tiling sizes (Table 2)
+      pif, pof, pox, poy    loop-unrolling factors (§2.2, Fig. 2)
+      pkx, pky              kernel-window unrolling factors
+      pb                    batch unrolling factor (Fig. 2(e))
+    """
+
+    loop_order: int = LoopOrder.PAPER
+    pe_group: int = 8
+    mac_per_group: int = 64
+    bank_height: int = 1024
+    bank_width: int = 64
+    weight_banks_pg: int = 4
+    act_banks_pg: int = 4
+    tif: int = 64
+    tix: int = 32
+    tiy: int = 32
+    tof: int = 64
+    pif: int = 8
+    pof: int = 8
+    pox: int = 2
+    poy: int = 2
+    pkx: int = 1
+    pky: int = 1
+    pb: int = 1
+
+    # ------------------------------------------------------------- derived
+    @property
+    def total_macs(self) -> int:
+        return self.pe_group * self.mac_per_group
+
+    def weight_buffer_bits(self) -> int:
+        return self.weight_banks_pg * self.pe_group * self.bank_height * \
+            self.bank_width
+
+    def act_buffer_bits(self) -> int:
+        return self.act_banks_pg * self.pe_group * self.bank_height * \
+            self.bank_width
+
+    def weight_bandwidth(self, hw: HardwareConstants) -> int:
+        """On-chip weight words deliverable per cycle."""
+        return max(1, self.weight_banks_pg * self.pe_group * self.bank_width
+                   // hw.bit_width)
+
+    def input_bandwidth(self, hw: HardwareConstants) -> int:
+        return max(1, self.act_banks_pg * self.pe_group * self.bank_width
+                   // hw.bit_width)
+
+    def area(self, hw: HardwareConstants) -> float:
+        """Unit-area model (paper §4.3)."""
+        sram_bits = self.weight_buffer_bits() + self.act_buffer_bits()
+        return (self.total_macs * (hw.area_per_mac + hw.area_per_mac_regfile)
+                + sram_bits * hw.area_per_sram_bit
+                + self.pe_group * hw.area_per_group_ctrl)
+
+    def asdict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class LatencyBreakdown:
+    """Per-stream latency decomposition (cycles)."""
+
+    compute_cycles: np.ndarray        # [ops]
+    weight_cycles: np.ndarray         # [ops]
+    input_cycles: np.ndarray          # [ops]
+    total_cycles: np.ndarray          # [ops] max(compute, memory)
+    valid: np.ndarray                 # [ops] Eq. 9-13 satisfied
+
+    @property
+    def stream_cycles(self) -> float:
+        return float(self.total_cycles.sum())
+
+    @property
+    def stream_valid(self) -> bool:
+        return bool(self.valid.all())
+
+
+# --------------------------------------------------------------------------
+# Vectorized evaluation.  `cfg_arrays` maps each AccelConfig field to an
+# int64 column vector of shape [C, 1]; the op stream contributes row vectors
+# of shape [1, O].  All formulas below broadcast to [C, O].
+# --------------------------------------------------------------------------
+
+_CFG_FIELDS = ("loop_order", "pe_group", "mac_per_group", "bank_height",
+               "bank_width", "weight_banks_pg", "act_banks_pg",
+               "tif", "tix", "tiy", "tof",
+               "pif", "pof", "pox", "poy", "pkx", "pky", "pb")
+
+
+def _configs_to_arrays(configs: Sequence[AccelConfig]) -> Dict[str, np.ndarray]:
+    return {
+        f: np.asarray([getattr(c, f) for c in configs],
+                      dtype=np.int64).reshape(len(configs), 1)
+        for f in _CFG_FIELDS
+    }
+
+
+def _ceil_div(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    return -(-a // np.maximum(b, 1))
+
+
+def evaluate_stream_many(
+    configs: Sequence[AccelConfig],
+    stream: OpStream,
+    hw: HardwareConstants = HardwareConstants(),
+    peak_weight_bits: int = 0,
+    peak_input_bits: int = 0,
+) -> Tuple[np.ndarray, np.ndarray, Dict[str, np.ndarray]]:
+    """Evaluate many configurations against one op stream.
+
+    Returns ``(total_cycles[C], valid[C], parts)`` where parts carries the
+    [C, O] compute / weight / input cycle matrices for analysis.
+    """
+    c = _configs_to_arrays(configs)
+    o = stream  # row vectors [1, O]
+
+    # ---- effective tiling (T* clamped into [1, N*]; Tkx=Nkx, Tky=Nky) ----
+    tif = np.minimum(c["tif"], o.nif)
+    tix = np.minimum(c["tix"], o.nix)
+    tiy = np.minimum(c["tiy"], o.niy)
+    tof = np.minimum(c["tof"], o.nof)
+    tkx, tky = o.nkx, o.nky
+    # output-tile extents implied by the input tile (stride-aware)
+    tox = np.clip((tix - o.nkx) // o.s + 1, 1, o.nox)
+    toy = np.clip((tiy - o.nky) // o.s + 1, 1, o.noy)
+
+    # ---- effective unrolling (P* <= T* <= N*) ----
+    pif = np.minimum(c["pif"], tif)
+    pof = np.minimum(c["pof"], tof)
+    pox = np.minimum(c["pox"], tox)
+    poy = np.minimum(c["poy"], toy)
+    pkx = np.minimum(c["pkx"], tkx)
+    pky = np.minimum(c["pky"], tky)
+    pb = np.minimum(c["pb"], o.batch)
+
+    unroll = pif * pof * pox * poy * pkx * pky * pb
+    total_macs = c["pe_group"] * c["mac_per_group"]
+    # Eq. (9): PE_group x MAC/group >= required parallel MACs/cycle
+    valid_macs = unroll <= total_macs
+
+    # ---- compute latency: Eq. (3) inter-tiling x inner-tiling ----
+    inter = (_ceil_div(o.nif, tif) * _ceil_div(o.nkx, tkx)
+             * _ceil_div(o.nky, tky) * _ceil_div(o.nox, tox)
+             * _ceil_div(o.noy, toy) * _ceil_div(o.nof, tof))
+    inner = (_ceil_div(tif, pif) * _ceil_div(tkx, pkx) * _ceil_div(tky, pky)
+             * _ceil_div(tox, pox) * _ceil_div(toy, poy)
+             * _ceil_div(tof, pof))
+    batch_iters = _ceil_div(o.batch, pb)
+    compute_cycles = inter * inner * batch_iters * o.repeat
+
+    # ---- data reuse: Eqs. (1)-(2) (Pix ~ Pox, Piy ~ Poy as in [1]) ----
+    weight_reuse = pox * poy * pb                                   # Eq. (1)
+    in_win_x = (pox - 1) * o.s + pkx
+    in_win_y = (poy - 1) * o.s + pky
+    input_reuse = np.maximum(
+        (pof * pkx * pky * pox * poy) // np.maximum(in_win_x * in_win_y, 1),
+        1)                                                          # Eq. (2)
+
+    # ---- memory fetch volume: Eqs. (5)-(6), + loop-order refetch model ----
+    num_weight = (o.nox * o.noy * o.nkx * o.nky * o.nif * o.nof
+                  * o.repeat).astype(np.float64)                    # Eq. (5)
+    num_input = num_weight * o.batch                                # Eq. (6)
+
+    lo = c["loop_order"]
+    spatial_tiles = _ceil_div(o.nox, tox) * _ceil_div(o.noy, toy)
+    ofm_tiles = _ceil_div(o.nof, tof)
+    ifm_tiles = _ceil_div(o.nif, tif)
+    # WEIGHT_STATIONARY: each weight word loaded once per (ifm x ofm) tile
+    # pass; inputs refetched for every output-channel tile.
+    ws_weight = (o.weight_elems_arr() * 1.0)
+    ws_input = (o.input_elems_arr() * o.batch * ofm_tiles).astype(np.float64)
+    # OUTPUT_STATIONARY: outputs resident; weights refetched per spatial
+    # tile, inputs refetched per output-channel tile.
+    os_weight = (o.weight_elems_arr() * spatial_tiles).astype(np.float64)
+    os_input = ws_input
+    # INPUT_STATIONARY: inputs resident once; weights refetched per spatial
+    # tile pass.
+    is_weight = os_weight
+    is_input = (o.input_elems_arr() * o.batch * 1.0)
+
+    num_weight_eff = np.where(
+        lo == LoopOrder.PAPER, num_weight / np.maximum(weight_reuse, 1),
+        np.where(lo == LoopOrder.WEIGHT_STATIONARY, ws_weight,
+                 np.where(lo == LoopOrder.OUTPUT_STATIONARY, os_weight,
+                          is_weight)))
+    num_input_eff = np.where(
+        lo == LoopOrder.PAPER, num_input / np.maximum(input_reuse, 1),
+        np.where(lo == LoopOrder.WEIGHT_STATIONARY, ws_input,
+                 np.where(lo == LoopOrder.OUTPUT_STATIONARY, os_input,
+                          is_input)))
+
+    wbw = np.maximum(c["weight_banks_pg"] * c["pe_group"] * c["bank_width"]
+                     // hw.bit_width, 1)
+    abw = np.maximum(c["act_banks_pg"] * c["pe_group"] * c["bank_width"]
+                     // hw.bit_width, 1)
+    weight_cycles = np.ceil(num_weight_eff / wbw)                   # Eq. (7)
+    input_cycles = np.ceil(num_input_eff / abw)                     # Eq. (8)
+
+    # ---- total: max(compute, memory) ----
+    total = np.maximum(compute_cycles,
+                       np.maximum(weight_cycles, input_cycles))
+
+    # ---- buffer-capacity constraints: Eqs. (10)-(13) ----
+    wbuf = (c["weight_banks_pg"] * c["pe_group"] * c["bank_height"]
+            * c["bank_width"])
+    abuf = (c["act_banks_pg"] * c["pe_group"] * c["bank_height"]
+            * c["bank_width"])
+    need_w_tile = tkx * tky * tif * tof * hw.bit_width              # Eq. (10)
+    need_a_tile = (tix * tiy * tif + tox * toy * tof) * hw.bit_width  # Eq.(12)
+    valid_buf = (wbuf >= need_w_tile) & (abuf >= need_a_tile)
+    if peak_weight_bits:
+        valid_buf = valid_buf & (wbuf >= peak_weight_bits)          # Eq. (11)
+    if peak_input_bits:
+        # Eq. (13): peak input demand scales with batch
+        valid_buf = valid_buf & (abuf >= peak_input_bits * o.batch.max())
+
+    valid = (valid_macs & valid_buf).all(axis=1)
+    total_cycles = total.sum(axis=1)
+    parts = {
+        "compute": compute_cycles,
+        "weight": weight_cycles,
+        "input": input_cycles,
+        "total": total,
+        "valid_ops": (valid_macs & valid_buf),
+    }
+    return total_cycles, valid, parts
+
+
+# OpStream helpers used by the loop-order variants above -------------------
+
+def _weight_elems_arr(self: OpStream) -> np.ndarray:
+    return self.nif * self.nkx * self.nky * self.nof * self.repeat
+
+
+def _input_elems_arr(self: OpStream) -> np.ndarray:
+    return self.nif * self.nix * self.niy * self.repeat
+
+
+OpStream.weight_elems_arr = _weight_elems_arr
+OpStream.input_elems_arr = _input_elems_arr
+
+
+def evaluate_stream(config: AccelConfig, stream: OpStream,
+                    hw: HardwareConstants = HardwareConstants(),
+                    peak_weight_bits: int = 0,
+                    peak_input_bits: int = 0) -> LatencyBreakdown:
+    """Evaluate a single configuration; returns the per-op breakdown."""
+    total, valid, parts = evaluate_stream_many(
+        [config], stream, hw, peak_weight_bits, peak_input_bits)
+    return LatencyBreakdown(
+        compute_cycles=parts["compute"][0],
+        weight_cycles=parts["weight"][0],
+        input_cycles=parts["input"][0],
+        total_cycles=parts["total"][0],
+        valid=parts["valid_ops"][0],
+    )
+
+
+def performance_gops(configs: Sequence[AccelConfig], stream: OpStream,
+                     hw: HardwareConstants = HardwareConstants(),
+                     peak_weight_bits: int = 0,
+                     peak_input_bits: int = 0) -> np.ndarray:
+    """GOPS per configuration; 0.0 where the config violates constraints
+
+    (the paper plots constraint-violating configurations at 0 GOPS, Fig. 7).
+    """
+    cycles, valid, _ = evaluate_stream_many(
+        configs, stream, hw, peak_weight_bits, peak_input_bits)
+    seconds = cycles / hw.frequency_hz
+    gops = np.where(valid & (cycles > 0),
+                    stream.total_ops / np.maximum(seconds, 1e-30) / 1e9,
+                    0.0)
+    return gops
+
+
+# --------------------------------------------------------------------------
+# Optional finer-grained buffer simulator (paper §3, last paragraph).
+# --------------------------------------------------------------------------
+
+class BufferSimulator:
+    """Block-level buffer residency simulator.
+
+    The layer is split into `n_blocks` computational blocks (loop-tile
+    granularity).  Each block costs its compute latency; if its input/weight
+    tile is not resident in the on-chip buffer, an off-chip transfer latency
+    is charged and the tile is installed with LRU eviction.  This refines the
+    idealized max(compute, memory) model when the working set exceeds the
+    buffer ("The number of computational blocks is a trade-off between
+    estimation speed and accuracy").
+    """
+
+    def __init__(self, config: AccelConfig,
+                 hw: HardwareConstants = HardwareConstants(),
+                 n_blocks: int = 64):
+        self.cfg = config
+        self.hw = hw
+        self.n_blocks = n_blocks
+
+    def simulate_op(self, op: Op) -> int:
+        cfg, hw = self.cfg, self.hw
+        tif = min(cfg.tif, op.nif)
+        tix = min(cfg.tix, op.nix)
+        tiy = min(cfg.tiy, op.niy)
+        tof = min(cfg.tof, op.nof)
+        tox = max(min((tix - op.nkx) // op.s + 1, op.nox), 1)
+        toy = max(min((tiy - op.nky) // op.s + 1, op.noy), 1)
+
+        n_if = -(-op.nif // tif)
+        n_of = -(-op.nof // tof)
+        n_sp = -(-op.nox // tox) * -(-op.noy // toy)
+        blocks = []
+        for b in range(min(self.n_blocks, n_if * n_of * n_sp)):
+            i = b % n_if
+            f = (b // n_if) % n_of
+            sp = b // (n_if * n_of)
+            blocks.append((i, f, sp))
+        scale = max(1, (n_if * n_of * n_sp) / max(len(blocks), 1))
+
+        w_tile_bits = op.nkx * op.nky * tif * tof * hw.bit_width
+        a_tile_bits = tix * tiy * tif * hw.bit_width
+        wbuf = cfg.weight_buffer_bits()
+        abuf = cfg.act_buffer_bits()
+        w_slots = max(1, wbuf // max(w_tile_bits, 1))
+        a_slots = max(1, abuf // max(a_tile_bits, 1))
+
+        # per-block compute latency (inner-tiling latency of Eq. (4))
+        pif = min(cfg.pif, tif)
+        pof = min(cfg.pof, tof)
+        pox = min(cfg.pox, tox)
+        poy = min(cfg.poy, toy)
+        pkx = min(cfg.pkx, op.nkx)
+        pky = min(cfg.pky, op.nky)
+        inner = (-(-tif // pif) * -(-op.nkx // pkx) * -(-op.nky // pky)
+                 * -(-tox // pox) * -(-toy // poy) * -(-tof // pof))
+
+        w_lru: List[Tuple[int, int]] = []   # (ifm_tile, ofm_tile)
+        a_lru: List[Tuple[int, int]] = []   # (ifm_tile, spatial_tile)
+        cycles = 0
+        xfer = hw.offchip_words_per_cycle
+        for (i, f, sp) in blocks:
+            cycles += inner
+            wkey, akey = (i, f), (i, sp)
+            if wkey not in w_lru:
+                cycles += hw.offchip_burst_setup + \
+                    w_tile_bits // hw.bit_width // xfer
+                w_lru.append(wkey)
+                if len(w_lru) > w_slots:
+                    w_lru.pop(0)
+            else:
+                w_lru.remove(wkey)
+                w_lru.append(wkey)
+            if akey not in a_lru:
+                cycles += hw.offchip_burst_setup + \
+                    a_tile_bits // hw.bit_width // xfer
+                a_lru.append(akey)
+                if len(a_lru) > a_slots:
+                    a_lru.pop(0)
+            else:
+                a_lru.remove(akey)
+                a_lru.append(akey)
+        return int(cycles * scale * op.repeat * op.batch)
+
+    def simulate(self, stream: OpStream) -> int:
+        return sum(self.simulate_op(op) for op in stream.ops)

@@ -1,0 +1,95 @@
+"""Kernel-tile DSE: the paper's loop-tiling optimization applied to Pallas
+BlockSpec shapes.
+
+This is the most literal transfer of the paper's §3 model to TPU: for the
+tiled matmul kernel (kernels/matmul.py) with tiles (bm, bk, bn),
+
+  compute cycles = ceil(M/bm) ceil(N/bn) ceil(K/bk)          (Eq. 3)
+                   x (bm/128)(bn/128)(bk/128) x MXU_ISSUE    (Eq. 4)
+  HBM traffic    = x-tile refetch + y-tile refetch + out     (Eqs. 5-8;
+                   with K innermost, x tiles are reused along N? no —
+                   x is refetched per j, y per i: classic output-stationary
+                   loop order)
+  VMEM constraint: (bm*bk + bk*bn) * double_buffer + bm*bn*4 <= VMEM
+                                                              (Eqs. 10-13)
+
+and latency = max(compute, memory) exactly as in the paper.  The SAME
+multi-step greedy (core/greedy.py semantics, reimplemented over this tiny
+space exhaustively since it is enumerable) picks the tile shape.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.roofline import HW
+
+__all__ = ["TileConfig", "tile_cost", "tune_matmul_tiles"]
+
+MXU_DIM = 128
+VMEM_BYTES = 16 * 1024 * 1024          # v5e per-core VMEM
+
+
+@dataclasses.dataclass(frozen=True)
+class TileConfig:
+    bm: int
+    bk: int
+    bn: int
+
+
+def tile_cost(M: int, K: int, N: int, t: TileConfig, *,
+              dtype_bytes: int = 2, hw: HW = HW()) -> Dict[str, float]:
+    """Latency model for one (M,K,N) matmul at tile t; seconds."""
+    gm = -(-M // t.bm)
+    gk = -(-K // t.bk)
+    gn = -(-N // t.bn)
+
+    # VMEM working set: double-buffered input tiles + fp32 accumulator
+    vmem = 2 * (t.bm * t.bk + t.bk * t.bn) * dtype_bytes + t.bm * t.bn * 4
+    valid = vmem <= VMEM_BYTES and t.bm % 8 == 0 and \
+        t.bk % MXU_DIM == 0 and t.bn % MXU_DIM == 0
+
+    # compute: every tile triple runs bm*bk*bn MACs on the MXU
+    flops = 2.0 * gm * gn * gk * t.bm * t.bk * t.bn
+    compute_s = flops / hw.peak_flops
+
+    # memory: with K innermost and output-stationary accumulation,
+    # x tiles stream once per (i, j) pass -> refetched gn times total;
+    # y tiles refetched gm times; output written once.
+    bytes_x = gm * gk * t.bm * t.bk * dtype_bytes * gn
+    bytes_y = gk * gn * t.bk * t.bn * dtype_bytes * gm
+    bytes_o = gm * gn * t.bm * t.bn * dtype_bytes
+    memory_s = (bytes_x + bytes_y + bytes_o) / hw.hbm_bw
+
+    return {"valid": valid, "compute_s": compute_s, "memory_s": memory_s,
+            "latency_s": max(compute_s, memory_s), "vmem_bytes": vmem,
+            "hbm_bytes": bytes_x + bytes_y + bytes_o}
+
+
+def tune_matmul_tiles(M: int, K: int, N: int, *, dtype_bytes: int = 2,
+                      hw: HW = HW(),
+                      bm_domain: Tuple[int, ...] = (128, 256, 512, 1024),
+                      bk_domain: Tuple[int, ...] = (128, 256, 512, 1024,
+                                                    2048),
+                      bn_domain: Tuple[int, ...] = (128, 256, 512, 1024),
+                      ) -> Tuple[TileConfig, Dict[str, float],
+                                 List[Tuple[TileConfig, float]]]:
+    """Exhaustive sweep (the space is enumerable; equivalent to Algorithm 1
+    with k = |variables|).  Returns (best tile, its cost, full ranking)."""
+    ranking: List[Tuple[TileConfig, float]] = []
+    best: Optional[TileConfig] = None
+    best_cost: Optional[Dict[str, float]] = None
+    for bm, bk, bn in itertools.product(bm_domain, bk_domain, bn_domain):
+        t = TileConfig(bm, bk, bn)
+        c = tile_cost(M, K, N, t, dtype_bytes=dtype_bytes, hw=hw)
+        if not c["valid"]:
+            continue
+        ranking.append((t, c["latency_s"]))
+        if best_cost is None or c["latency_s"] < best_cost["latency_s"]:
+            best, best_cost = t, c
+    ranking.sort(key=lambda x: x[1])
+    assert best is not None, "no valid tile under the VMEM constraint"
+    return best, best_cost, ranking

@@ -1,0 +1,167 @@
+"""Accelerator design space (paper Table 2 + §2.2 unrolling variables).
+
+A `DesignSpace` is an ordered mapping from design-variable name to its
+discrete domain.  `sample()` draws a random valid starting configuration
+(Algorithm 1 line 1); `neighbors_over()` enumerates one variable's domain
+with all others fixed (Algorithm 1 lines 5-9).
+
+The default space mirrors the paper's Table 2 plus the P* unrolling factors
+of §2.2, with power-of-two domains as is standard for banked-SRAM/systolic
+design points.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.costmodel import AccelConfig, HardwareConstants, LoopOrder
+
+__all__ = ["DesignSpace", "default_space", "DEFAULT_AREA_BUDGET"]
+
+
+def _pow2(lo: int, hi: int) -> Tuple[int, ...]:
+    out = []
+    v = lo
+    while v <= hi:
+        out.append(v)
+        v *= 2
+    return tuple(out)
+
+
+@dataclasses.dataclass
+class DesignSpace:
+    """Discrete domains for every design variable of `AccelConfig`."""
+
+    domains: Dict[str, Tuple[int, ...]]
+    hw: HardwareConstants = dataclasses.field(default_factory=HardwareConstants)
+    area_budget: float = 0.0
+
+    @property
+    def variables(self) -> List[str]:
+        return list(self.domains.keys())
+
+    def size(self) -> float:
+        n = 1.0
+        for d in self.domains.values():
+            n *= len(d)
+        return n
+
+    def sample(self, rng: np.random.Generator,
+               max_tries: int = 1000,
+               validator=None) -> AccelConfig:
+        """Random *valid* configuration (Algorithm 1 line 1).
+
+        `validator(cfg) -> bool` may additionally enforce the Eq. 9-13
+        application constraints so the greedy search never starts from a
+        0-GOPS point.
+        """
+        for _ in range(max_tries):
+            kwargs = {k: int(rng.choice(v)) for k, v in self.domains.items()}
+            cfg = AccelConfig(**kwargs)
+            if self.area_budget > 0 and cfg.area(self.hw) > self.area_budget:
+                continue
+            if validator is not None and not validator(cfg):
+                continue
+            return cfg
+        raise RuntimeError("could not sample a valid configuration; loosen "
+                           "the area budget or shrink the space")
+
+    def neighbors_over(self, cfg: AccelConfig,
+                       variable: str) -> List[AccelConfig]:
+        """All configurations obtained by sweeping `variable` (others fixed)."""
+        out = []
+        for v in self.domains[variable]:
+            out.append(dataclasses.replace(cfg, **{variable: int(v)}))
+        return out
+
+    def within_area(self, cfg: AccelConfig) -> bool:
+        return self.area_budget <= 0 or cfg.area(self.hw) <= self.area_budget
+
+    def repair_for_peaks(self, cfg: AccelConfig, peak_weight_bits: int,
+                         peak_input_bits: int) -> AccelConfig:
+        """Minimal domain-respecting repair: grow buffer variables until the
+        Eq. (11)/(13) peak-demand floors hold, then shrink compute variables
+        until the area budget holds.  Keeps the rest of the random sample
+        untouched (Algorithm 1 line 1 needs *a* valid point, not a good
+        one)."""
+        grow_w = ("bank_height", "weight_banks_pg", "bank_width", "pe_group")
+        grow_a = ("bank_height", "act_banks_pg", "bank_width", "pe_group")
+
+        def bump(c: AccelConfig, var: str) -> Optional[AccelConfig]:
+            dom = sorted(self.domains[var])
+            cur = getattr(c, var)
+            bigger = [v for v in dom if v > cur]
+            if not bigger:
+                return None
+            return dataclasses.replace(c, **{var: int(bigger[0])})
+
+        for _ in range(64):
+            if cfg.weight_buffer_bits() >= peak_weight_bits:
+                break
+            for var in grow_w:
+                nxt = bump(cfg, var)
+                if nxt is not None:
+                    cfg = nxt
+                    break
+            else:
+                break
+        for _ in range(64):
+            if cfg.act_buffer_bits() >= peak_input_bits:
+                break
+            for var in grow_a:
+                nxt = bump(cfg, var)
+                if nxt is not None:
+                    cfg = nxt
+                    break
+            else:
+                break
+        # area repair: shrink compute/tiling only — never pe_group or the
+        # bank variables (that would re-break the buffer floors just grown)
+        for var in ("mac_per_group", "tif", "tof"):
+            while (self.area_budget > 0
+                   and cfg.area(self.hw) > self.area_budget):
+                dom = sorted(self.domains[var])
+                cur = getattr(cfg, var)
+                smaller = [v for v in dom if v < cur]
+                if not smaller:
+                    break
+                cfg = dataclasses.replace(cfg, **{var: int(smaller[-1])})
+        return cfg
+
+
+# A representative area budget: room for ~16K MACs plus ~tens of Mbit of
+# banked SRAM plus control — large enough that the big-peak applications
+# (fasterRCNN, deeplab) are feasible at all, small enough that their memory
+# lower bounds (Eqs. 10-13) kill many configurations (the paper's dense
+# 0-GOPS lines in Fig. 7(b)/(d)) and compute/memory trade-offs are real.
+DEFAULT_AREA_BUDGET = 90000.0
+
+
+def default_space(hw: Optional[HardwareConstants] = None,
+                  area_budget: float = DEFAULT_AREA_BUDGET) -> DesignSpace:
+    """The paper-shaped design space (Table 2 variables + P* unrolling)."""
+    hw = hw or HardwareConstants()
+    domains: Dict[str, Tuple[int, ...]] = {
+        "loop_order": tuple(int(v) for v in LoopOrder),
+        "pe_group": _pow2(1, 64),
+        "mac_per_group": _pow2(16, 512),
+        "bank_height": _pow2(256, 8192),
+        "bank_width": (16, 32, 64, 128),
+        "weight_banks_pg": _pow2(1, 16),
+        "act_banks_pg": _pow2(1, 16),
+        "tif": _pow2(4, 512),
+        "tix": _pow2(8, 256),
+        "tiy": _pow2(8, 256),
+        "tof": _pow2(4, 512),
+        "pif": _pow2(1, 64),
+        "pof": _pow2(1, 64),
+        "pox": _pow2(1, 16),
+        "poy": _pow2(1, 16),
+        "pkx": (1, 3, 5, 7),
+        "pky": (1, 3, 5, 7),
+        "pb": _pow2(1, 16),
+    }
+    return DesignSpace(domains=domains, hw=hw, area_budget=area_budget)

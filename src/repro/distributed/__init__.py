@@ -1,0 +1,5 @@
+from repro.distributed.sharding import (AxisRules, logical_sharding,
+                                        shard_constraint, tree_shardings)
+
+__all__ = ["AxisRules", "logical_sharding", "shard_constraint",
+           "tree_shardings"]

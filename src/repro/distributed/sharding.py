@@ -1,0 +1,121 @@
+"""Logical-axis sharding rules (MaxText-style) for the model zoo.
+
+Model code annotates tensors with *logical* axis names ("batch", "heads",
+"ff", "vocab", "experts", "embed", "kv_seq", ...).  An `AxisRules` instance
+maps logical names onto physical mesh axes ("pod", "data", "model").  The
+mapping itself is a **design variable of the TPU execution space**: the
+software-defined DSE (core/autotune.py) mutates these rules exactly the way
+the paper's optimizer mutates `loop_order`/`T*` — same Algorithm 1,
+different space.
+
+Two standard rule-sets are provided:
+
+  tp_rules    — Megatron-style tensor parallelism on the "model" axis,
+                batch on ("pod", "data"); parameters replicated on "data".
+  fsdp_rules  — tp_rules + parameter "embed" dimension sharded over "data"
+                (ZeRO-3/FSDP); XLA inserts per-layer all-gathers which the
+                scanned-layer structure lets it overlap with compute.
+
+Divisibility fallbacks: if an arch's head count does not divide the model
+axis (e.g. 14-head qwen2-0.5b on a 16-wide model axis), attention
+activations are sharded on the *fused* head*head_dim dimension instead of
+the head dimension; GSPMD handles the reshape resharding.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["AxisRules", "logical_sharding", "shard_constraint",
+           "tree_shardings", "tp_rules", "fsdp_rules"]
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    """logical axis name -> physical mesh axis (or tuple, or None)."""
+
+    rules: Tuple[Tuple[str, MeshAxes], ...]
+
+    def get(self, name: Optional[str]) -> MeshAxes:
+        if name is None:
+            return None
+        for k, v in self.rules:
+            if k == name:
+                return v
+        return None
+
+    def spec(self, logical_axes: Sequence[Optional[str]]) -> P:
+        return P(*[self.get(a) for a in logical_axes])
+
+    def replace(self, **kv: MeshAxes) -> "AxisRules":
+        d = dict(self.rules)
+        d.update(kv)
+        return AxisRules(tuple(d.items()))
+
+    def asdict(self) -> Dict[str, MeshAxes]:
+        return dict(self.rules)
+
+
+def tp_rules(batch_axes: Tuple[str, ...] = ("data",)) -> AxisRules:
+    return AxisRules((
+        ("batch", batch_axes),
+        ("seq", None),
+        ("attn_seq", "model"),        # context parallelism inside attention
+        ("kv_seq", "model"),          # decode KV caches: flash-decode style
+        ("kv_heads", None),           # alt decode layout (autotune flips)
+        ("heads", "model"),
+        ("qkv_fused", "model"),
+        ("ff", "model"),
+        ("vocab", "model"),
+        ("experts", "model"),
+        ("embed", None),
+        ("lru", "model"),
+        ("layers", None),
+    ))
+
+
+def fsdp_rules(batch_axes: Tuple[str, ...] = ("data",)) -> AxisRules:
+    return tp_rules(batch_axes).replace(embed="data")
+
+
+def _mesh_or_none() -> Optional[Mesh]:
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return None
+    return mesh
+
+
+def logical_sharding(mesh: Mesh, rules: AxisRules,
+                     logical_axes: Sequence[Optional[str]]) -> NamedSharding:
+    return NamedSharding(mesh, rules.spec(logical_axes))
+
+
+def shard_constraint(x: jax.Array, rules: Optional[AxisRules],
+                     *logical_axes: Optional[str]) -> jax.Array:
+    """Apply a logical-axis sharding constraint if a mesh is active."""
+    if rules is None:
+        return x
+    mesh = _mesh_or_none()
+    if mesh is None:
+        return x
+    spec = rules.spec(logical_axes)
+    # drop constraints that don't divide (GSPMD pads, but avoid degenerate
+    # 1-sized dims constrained onto big axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def tree_shardings(mesh: Mesh, rules: AxisRules, spec_tree) -> object:
+    """Map a tree of logical-axes tuples to NamedShardings."""
+    return jax.tree.map(
+        lambda axes: logical_sharding(mesh, rules, axes),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x),
+    )

@@ -1,0 +1,74 @@
+"""Tiled matmul Pallas TPU kernel with tunable block shapes.
+
+The BlockSpec tile sizes (bm, bk, bn) are the TPU analogue of the paper's
+loop-tiling variables T* — they determine the VMEM working set
+(bm*bk + bk*bn + bm*bn words) and MXU utilization (tiles should be
+multiples of 128 on the matmul dims).  `core/autotune.py` sweeps them with
+the multi-step greedy optimizer exactly as the paper sweeps Tif/Tix/Tof.
+
+Grid = (M/bm, N/bn, K/bk) with K innermost: the fp32 accumulator tile
+lives in VMEM scratch across the K iterations of one (i, j) output tile,
+and Pallas' automatic pipelining overlaps the HBM->VMEM copies of the next
+(x, y) tiles with the MXU work on the current ones — the double-buffering
+the paper's Eq. (4) memory model assumes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["matmul"]
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], y_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul(x: jax.Array, y: jax.Array, *, bm: int = 256, bk: int = 512,
+           bn: int = 256, out_dtype=None,
+           interpret: bool = False) -> jax.Array:
+    """x [M, K] @ y [K, N] -> [M, N] with (bm, bk, bn) VMEM tiles."""
+    M, K = x.shape
+    K2, N = y.shape
+    assert K == K2, (x.shape, y.shape)
+    out_dtype = out_dtype or x.dtype
+
+    bm = min(bm, M)
+    bk = min(bk, K)
+    bn = min(bn, N)
+    pm, pk, pn = (-M % bm), (-K % bk), (-N % bn)
+    if pm or pk:
+        x = jnp.pad(x, ((0, pm), (0, pk)))
+    if pk or pn:
+        y = jnp.pad(y, ((0, pk), (0, pn)))
+    Mp, Kp, Np = M + pm, K + pk, N + pn
+
+    grid = (Mp // bm, Np // bn, Kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, y)
+    return out[:M, :N]

@@ -1,0 +1,49 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+`interpret` defaults to True on CPU (the kernels are validated by running
+their bodies in Python) and False on TPU, where they lower to Mosaic.  The
+block shapes are exposed so `core/autotune.py` can sweep them.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import matmul as _mm
+from repro.kernels import rg_lru as _rg
+
+__all__ = ["matmul", "flash_attention", "rglru_scan", "default_interpret"]
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def matmul(x, y, *, bm: int = 256, bk: int = 512, bn: int = 256,
+           interpret: bool | None = None):
+    if interpret is None:
+        interpret = default_interpret()
+    return _mm.matmul(x, y, bm=bm, bk=bk, bn=bn, interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bkv", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 512,
+                    bkv: int = 512, interpret: bool | None = None):
+    if interpret is None:
+        interpret = default_interpret()
+    return _fa.flash_attention(q, k, v, causal=causal, bq=bq, bkv=bkv,
+                               interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "bw", "interpret"))
+def rglru_scan(a, b, *, bs: int = 256, bw: int = 512,
+               interpret: bool | None = None):
+    if interpret is None:
+        interpret = default_interpret()
+    return _rg.rglru_scan(a, b, bs=bs, bw=bw, interpret=interpret)

@@ -1,0 +1,214 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape) cell, lower + compile the cell's
+step function on the production mesh — 16x16 (256 chips, single pod) and
+2x16x16 (512 chips, two pods) — and record:
+
+  * `compiled.memory_analysis()`  (proves the program fits per device)
+  * `compiled.cost_analysis()`    (FLOPs / bytes for the roofline)
+  * collective bytes parsed from the post-SPMD HLO
+
+Results are written incrementally to experiments/dryrun/<cell>.json so the
+sweep is resumable.  The two XLA_FLAGS lines above MUST stay the first
+statements in this module: jax locks the device count on first init.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro import configs
+from repro.configs.shapes import SHAPES, shape_by_name
+from repro.core.roofline import (CollectiveStats, analytic_hbm_bytes,
+                                 measure_compiled, model_flops,
+                                 roofline_from_totals)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_probe_bundles, build_step_bundle
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+# Default gradient-accumulation factors: chosen so the per-device activation
+# working set of train_4k fits 16 GB HBM (hillclimbed further in §Perf).
+# fp8 KV cache for archs whose bf16 cache + bf16 weights exceed HBM at the
+# assigned decode shape (production fp8-KV serving; see DESIGN.md)
+DEFAULT_SERVE_KV_DTYPE = {
+    "qwen2.5-32b": "f8",
+}
+
+DEFAULT_MICROBATCHES = {
+    "qwen2.5-32b": 16, "mistral-nemo-12b": 8, "recurrentgemma-9b": 8,
+    "qwen2.5-3b": 4, "deepseek-v2-lite-16b": 2, "olmoe-1b-7b": 2,
+    "xlstm-1.3b": 4, "qwen2-0.5b": 2, "internvl2-1b": 2,
+    "whisper-medium": 2,
+}
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             out_dir: Path, *, sharding_mode: str = "fsdp",
+             remat: str = "full", microbatches: int = 0, overrides=None,
+             rule_updates=None, tag: str = "", probes: bool = True) -> dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cell_id = f"{arch_name}_{shape_name}_{mesh_name}{tag}"
+    out_path = out_dir / f"{cell_id}.json"
+
+    shape = shape_by_name(shape_name)
+    ok, why = configs.cell_applicable(arch_name, shape)
+    if not ok:
+        rec = {"cell": cell_id, "status": "SKIPPED", "reason": why}
+        out_path.parent.mkdir(parents=True, exist_ok=True)
+        out_path.write_text(json.dumps(rec, indent=2))
+        print(f"[dryrun] {cell_id}: SKIPPED ({why.split(':')[0]})")
+        return rec
+
+    arch = configs.get_arch(arch_name)
+    if microbatches <= 0:
+        microbatches = DEFAULT_MICROBATCHES.get(arch_name, 1) \
+            if shape.mode == "train" else 1
+    if shape.mode == "decode" and arch_name in DEFAULT_SERVE_KV_DTYPE:
+        overrides = dict(overrides or {})
+        overrides.setdefault("kv_dtype",
+                             DEFAULT_SERVE_KV_DTYPE[arch_name])
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if shape.mode == "train":
+        # each microbatch must still tile the batch-sharding axes
+        from repro.launch.mesh import batch_axes_for
+        n_shards = 1
+        for a in batch_axes_for(mesh, shape.global_batch):
+            n_shards *= mesh.shape[a]
+        microbatches = max(1, min(microbatches,
+                                  shape.global_batch // n_shards))
+    chips = mesh.size
+    t0 = time.time()
+    try:
+        bundle = build_step_bundle(arch, shape, mesh,
+                                   sharding_mode=sharding_mode, remat=remat,
+                                   microbatches=microbatches,
+                                   overrides=overrides,
+                                   rule_updates=rule_updates)
+        with mesh:
+            lowered = bundle.lower()
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            print(mem)                          # proves it fits
+            ca = compiled.cost_analysis()
+            print({k: ca.get(k) for k in ("flops", "bytes accessed")})
+            flops, hbm, coll, peak = measure_compiled(compiled)
+
+            # scan-aware accounting: add unit-body costs x multipliers
+            probe_info = []
+            if probes:
+                for pb in build_probe_bundles(
+                        arch, shape, mesh, sharding_mode=sharding_mode,
+                        remat=remat, microbatches=microbatches,
+                        overrides=overrides, rule_updates=rule_updates):
+                    pc = pb.bundle.lower().compile()
+                    pf, pbyt, pcoll, _ = measure_compiled(pc)
+                    flops += pb.multiplier * pf
+                    hbm += pb.multiplier * pbyt
+                    for kind, nb in pcoll.by_kind.items():
+                        coll.add(kind, pb.multiplier * nb)
+                    probe_info.append({
+                        "name": pb.name, "multiplier": pb.multiplier,
+                        "flops": pf, "bytes": pbyt,
+                        "coll_bytes": pcoll.total_bytes})
+        kv_b = 1 if (overrides or {}).get("kv_dtype") == "f8" else 2
+        rep = roofline_from_totals(
+            arch=arch_name, shape=shape_name, mesh_name=mesh_name,
+            chips=chips, flops=flops, hbm_bytes=hbm, coll=coll,
+            peak_bytes=peak,
+            analytic_bytes=analytic_hbm_bytes(
+                arch, shape, chips, microbatches=microbatches,
+                kv_bytes=kv_b),
+            model_flops_total=model_flops(arch, shape))
+        rec = {
+            "cell": cell_id, "status": "OK",
+            "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+            "total_s": round(time.time() - t0, 2),
+            "memory_analysis": str(mem),
+            "fits_hbm": bool(peak <= 16e9),
+            "roofline": rep.to_json(),
+            "probes": probe_info,
+            "config": {"sharding_mode": sharding_mode, "remat": remat,
+                       "microbatches": microbatches,
+                       "overrides": overrides or {},
+                       "rule_updates": {k: str(v) for k, v in
+                                        (rule_updates or {}).items()}},
+        }
+        print(f"[dryrun] {cell_id}: OK peak={peak/1e9:.2f}GB "
+              f"compile={t_compile:.1f}s  {rep.row()}")
+    except Exception as e:   # noqa: BLE001 — record the failure, keep going
+        rec = {"cell": cell_id, "status": "FAILED",
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+        print(f"[dryrun] {cell_id}: FAILED {type(e).__name__}: {e}")
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(rec, indent=2))
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=list(configs.ARCH_NAMES))
+    ap.add_argument("--shape", choices=[s.name for s in SHAPES])
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true",
+                    help="sweep every (arch x shape) cell")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip cells whose JSON already exists")
+    ap.add_argument("--sharding-mode", default="fsdp",
+                    choices=["fsdp", "tp"])
+    ap.add_argument("--remat", default="full",
+                    choices=["none", "full", "dots"])
+    ap.add_argument("--out", default=str(OUT_DIR))
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        cells = [(a, s.name) for a in configs.ARCH_NAMES for s in SHAPES]
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    n_fail = 0
+    for arch_name, shape_name in cells:
+        for multi_pod in meshes:
+            mesh_name = "2x16x16" if multi_pod else "16x16"
+            cell_id = f"{arch_name}_{shape_name}_{mesh_name}"
+            if args.resume and (out_dir / f"{cell_id}.json").exists():
+                prev = json.loads((out_dir / f"{cell_id}.json").read_text())
+                if prev.get("status") in ("OK", "SKIPPED"):
+                    print(f"[dryrun] {cell_id}: cached ({prev['status']})")
+                    continue
+            rec = run_cell(arch_name, shape_name, multi_pod, out_dir,
+                           sharding_mode=args.sharding_mode,
+                           remat=args.remat)
+            if rec["status"] == "FAILED":
+                n_fail += 1
+    print(f"[dryrun] done; {n_fail} failures")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,482 @@
+"""Step builders: train_step / prefill_step / serve_step per architecture,
+plus `input_specs` (ShapeDtypeStruct stand-ins — shardable, weak-type
+correct, never allocated) and the in/out sharding trees for pjit.
+
+This is the single place where (arch x shape x mesh) becomes a concrete
+jit-able computation; the dry-run, the real trainer and the autotuner all
+go through these builders.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import ShapeSpec
+from repro.distributed.sharding import AxisRules, fsdp_rules, tp_rules
+from repro.launch.mesh import batch_axes_for
+from repro.models import layers as L
+from repro.models.config import ArchConfig
+from repro.models.encdec import EncDecLM
+from repro.models.lm import DecoderLM
+from repro.models.layers import Runtime, Spec
+from repro.optim import (adamw_init, adamw_init_specs, adamw_update,
+                         linear_warmup_cosine)
+
+PyTree = Any
+
+__all__ = ["build_model", "make_runtime", "input_specs", "input_shardings",
+           "make_train_step", "make_prefill_step", "make_serve_step",
+           "StepBundle", "build_step_bundle"]
+
+
+def build_model(arch: ArchConfig):
+    return EncDecLM(arch) if arch.is_encdec else DecoderLM(arch)
+
+
+def make_runtime(mesh: Optional[Mesh], arch: ArchConfig, shape: ShapeSpec,
+                 *, sharding_mode: str = "fsdp", remat: str = "full",
+                 use_pallas: bool = False,
+                 overrides: Optional[Dict[str, Any]] = None,
+                 rule_updates: Optional[Dict[str, Any]] = None) -> Runtime:
+    """Execution-space point.  `sharding_mode`, `remat` and the Runtime
+    block sizes are the TPU design variables the autotuner sweeps."""
+    rules: Optional[AxisRules] = None
+    if mesh is not None:
+        batch_axes = batch_axes_for(mesh, shape.global_batch)
+        rules = (fsdp_rules(batch_axes) if sharding_mode == "fsdp"
+                 else tp_rules(batch_axes))
+        if shape.mode == "decode":
+            # decode: parameters stay TP-resident (a per-layer FSDP gather
+            # would put the whole weight read on ICI each token)
+            rules = tp_rules(batch_axes)
+        # prefill keeps the requested mode: FSDP-sharded weights cost one
+        # per-layer gather per 32k-token pass (negligible vs. the compute)
+        # and cut the per-chip parameter footprint by the data-axis width
+        if rule_updates:
+            rules = rules.replace(**rule_updates)
+    kw: Dict[str, Any] = dict(mesh=mesh, rules=rules,
+                              remat=remat if shape.mode == "train" else "none",
+                              use_pallas=use_pallas)
+    if shape.mode != "train":
+        # serving runs bf16 weights (production default; halves HBM and
+        # doubles effective weight-streaming bandwidth)
+        kw["param_dtype"] = jnp.bfloat16
+    if overrides:
+        kw.update(overrides)
+    return Runtime(**kw)
+
+
+# ------------------------------------------------------------- input specs
+
+def input_specs(arch: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.mode in ("train", "prefill"):
+        if arch.is_encdec:
+            return {
+                "frames": jax.ShapeDtypeStruct(
+                    (B, arch.encoder_seq, arch.d_model), jnp.bfloat16),
+                "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            }
+        batch: Dict[str, Any] = {}
+        s_text = S
+        if arch.frontend == "vit_stub":
+            s_text = S - arch.num_patches
+            batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, arch.num_patches, arch.d_model), jnp.bfloat16)
+        batch["tokens"] = jax.ShapeDtypeStruct((B, s_text), i32)
+        return batch
+    # decode: one new token against a seq_len-deep cache
+    return {
+        "token": jax.ShapeDtypeStruct((B, 1), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+def input_shardings(mesh: Mesh, rules: AxisRules,
+                    specs: Dict[str, Any]) -> Dict[str, Any]:
+    out = {}
+    for k, v in specs.items():
+        if k == "pos":
+            out[k] = NamedSharding(mesh, P())
+        else:
+            axes = ["batch"] + [None] * (len(v.shape) - 1)
+            out[k] = NamedSharding(mesh, rules.spec(axes))
+    return out
+
+
+def shardings_of_specs(mesh: Mesh, rules: AxisRules, specs: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, rules.spec(s.axes)), specs,
+        is_leaf=lambda x: isinstance(x, Spec))
+
+
+# ------------------------------------------------------------ step builders
+
+def make_train_step(model, rt: Runtime, *, base_lr: float = 3e-4,
+                    warmup_steps: int = 100, total_steps: int = 10000,
+                    microbatches: int = 1) -> Callable:
+    """Training step with optional gradient accumulation.
+
+    `microbatches` is an execution-space design variable (the analogue of
+    the paper's batch-tiling `T*`): it divides the per-step activation
+    working set by n at the cost of n sequential scan iterations.
+    """
+    def loss_fn(p, mb):
+        return model.loss(p, mb, rt)
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            def split(x):
+                n = microbatches
+                y = x.reshape((n, x.shape[0] // n) + x.shape[1:])
+                return rt.shard(y, None, "batch")
+            micro = jax.tree.map(split, batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def micro_step(carry, mb):
+                loss_acc, gacc = carry
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                gacc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), gacc, grads)
+                return (loss_acc + loss, gacc), None
+
+            (loss, gsum), _ = jax.lax.scan(
+                micro_step, (jnp.zeros((), jnp.float32), zeros), micro)
+            inv = 1.0 / microbatches
+            grads = jax.tree.map(lambda g: g * inv, gsum)
+            loss = loss * inv
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        # step+1: the schedule is evaluated for the step being taken (a
+        # 0-indexed counter would silently zero the first update)
+        lr = linear_warmup_cosine(opt_state.step + 1, base_lr=base_lr,
+                                  warmup_steps=warmup_steps,
+                                  total_steps=total_steps)
+        new_params, new_state, gnorm = adamw_update(grads, opt_state, params,
+                                                    lr)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return new_params, new_state, metrics
+    return train_step
+
+
+def make_prefill_step(model, rt: Runtime) -> Callable:
+    def prefill_step(params, batch):
+        # serving prefill returns the last-position logits (sampler input);
+        # last_only avoids materializing GBs of full-sequence fp32 logits
+        logits = model.forward(params, batch, rt, last_only=True)
+        return logits[:, -1, :]
+    return prefill_step
+
+
+def make_serve_step(model, rt: Runtime) -> Callable:
+    def serve_step(params, cache, token, pos):
+        return model.decode_step(params, cache, token, pos, rt)
+    return serve_step
+
+
+# ------------------------------------------------------- full bundle (cell)
+
+@dataclasses.dataclass
+class StepBundle:
+    """Everything needed to lower one (arch x shape x mesh) cell."""
+
+    arch: ArchConfig
+    shape: ShapeSpec
+    rt: Runtime
+    step_fn: Callable
+    args_shapes: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...] = ()
+
+    def lower(self):
+        jitted = jax.jit(self.step_fn, in_shardings=self.in_shardings,
+                         out_shardings=self.out_shardings,
+                         donate_argnums=self.donate_argnums)
+        return jitted.lower(*self.args_shapes)
+
+
+def build_step_bundle(arch: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+                      *, sharding_mode: str = "fsdp", remat: str = "full",
+                      microbatches: int = 1,
+                      overrides: Optional[Dict[str, Any]] = None,
+                      rule_updates: Optional[Dict[str, Any]] = None
+                      ) -> StepBundle:
+    rt = make_runtime(mesh, arch, shape, sharding_mode=sharding_mode,
+                      remat=remat, overrides=overrides,
+                      rule_updates=rule_updates)
+    model = build_model(arch)
+    rules = rt.rules
+    pspecs = model.param_specs()
+    params_shapes = L.spec_shapes(pspecs, rt.param_dtype)
+    params_sh = shardings_of_specs(mesh, rules, pspecs)
+    batch_specs = input_specs(arch, shape)
+    batch_sh = input_shardings(mesh, rules, batch_specs)
+
+    if shape.mode == "train":
+        opt_shapes = adamw_init_specs(params_shapes)
+        opt_sh = type(opt_shapes)(
+            step=NamedSharding(mesh, P()),
+            mu=jax.tree.map(lambda s: s, params_sh),
+            nu=jax.tree.map(lambda s: s, params_sh))
+        step_fn = make_train_step(model, rt, microbatches=microbatches)
+        metrics_sh = {"loss": NamedSharding(mesh, P()),
+                      "grad_norm": NamedSharding(mesh, P()),
+                      "lr": NamedSharding(mesh, P())}
+        return StepBundle(
+            arch=arch, shape=shape, rt=rt, step_fn=step_fn,
+            args_shapes=(params_shapes, opt_shapes, batch_specs),
+            in_shardings=(params_sh, opt_sh, batch_sh),
+            out_shardings=(params_sh, opt_sh, metrics_sh),
+            donate_argnums=(0, 1))
+
+    if shape.mode == "prefill":
+        step_fn = make_prefill_step(model, rt)
+        out_sh = NamedSharding(mesh, rules.spec(["batch", "vocab"]))
+        return StepBundle(
+            arch=arch, shape=shape, rt=rt, step_fn=step_fn,
+            args_shapes=(params_shapes, batch_specs),
+            in_shardings=(params_sh, batch_sh),
+            out_shardings=out_sh)
+
+    # decode
+    kv_dt = jnp.float8_e4m3fn if rt.kv_dtype == "f8" else jnp.bfloat16
+    cache_specs_tree = model.cache_specs(shape.global_batch, shape.seq_len)
+    cache_shapes = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, kv_dt if s.dtype == "bf16" else s.resolved_dtype(
+                jnp.bfloat16)),
+        cache_specs_tree, is_leaf=lambda x: isinstance(x, Spec))
+    cache_sh = shardings_of_specs(mesh, rules, cache_specs_tree)
+    dec_specs = input_specs(arch, shape)
+    tok_sh = NamedSharding(mesh, rules.spec(["batch", None]))
+    pos_sh = NamedSharding(mesh, P())
+    step_fn = make_serve_step(model, rt)
+    logits_sh = NamedSharding(mesh, rules.spec(["batch", None, "vocab"]))
+    return StepBundle(
+        arch=arch, shape=shape, rt=rt, step_fn=step_fn,
+        args_shapes=(params_shapes, cache_shapes, dec_specs["token"],
+                     dec_specs["pos"]),
+        in_shardings=(params_sh, cache_sh, tok_sh, pos_sh),
+        out_shardings=(logits_sh, cache_sh),
+        donate_argnums=(1,))
+
+
+# -------------------------------------------------- scan-aware probe bundles
+#
+# XLA's cost_analysis() counts a while-loop (scan) body ONCE, not multiplied
+# by its trip count, so a scanned L-layer model under-reports FLOPs/bytes by
+# ~L x.  Probes fix this: for each scan group we lower the *unit body* as a
+# standalone program under the same mesh/sharding and add its costs
+# (repeats - 1) times on top of the full program's (which already contains
+# each body once).  Collective bytes aggregate the same way.
+
+@dataclasses.dataclass
+class ProbeBundle:
+    name: str
+    multiplier: int                      # repeats - 1
+    bundle: StepBundle
+
+
+def _act_specs(mesh, rules, B: int, S: int, D: int):
+    x = jax.ShapeDtypeStruct((B, S, D), jnp.bfloat16)
+    sh = NamedSharding(mesh, rules.spec(["batch", None, None]))
+    return x, sh
+
+
+def build_probe_bundles(arch: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+                        *, sharding_mode: str = "fsdp", remat: str = "full",
+                        microbatches: int = 1,
+                        overrides: Optional[Dict[str, Any]] = None,
+                        rule_updates: Optional[Dict[str, Any]] = None
+                        ) -> list:
+    """One probe per scan group with repeats > 1 (or per enc/dec stack),
+    plus — when gradient accumulation is on — one whole-microbatch probe.
+
+    Cost aggregation identity (scan bodies counted once by XLA):
+      total = full_program
+            + (microbatches - 1) x microbatch_probe
+            + microbatches x sum_g (repeats_g - 1) x unit_probe_g
+    """
+    from repro.models import lm as lm_mod
+    rt = make_runtime(mesh, arch, shape, sharding_mode=sharding_mode,
+                      remat=remat, overrides=overrides,
+                      rule_updates=rule_updates)
+    rules = rt.rules
+    B = shape.global_batch
+    if shape.mode == "train":
+        B = B // microbatches
+    S = 1 if shape.mode == "decode" else shape.seq_len
+    D = arch.d_model
+    probes: list = []
+
+    def make(name: str, mult: int, fwd_fn, pspecs_unit, cache_unit=None):
+        if mult <= 0:
+            return
+        if shape.mode == "train":
+            # unit bodies run once per microbatch: n*(R-1) extra counts
+            mult = mult * microbatches
+        pshapes = L.spec_shapes(pspecs_unit, rt.param_dtype)
+        psh = shardings_of_specs(mesh, rules, pspecs_unit)
+        x_spec, x_sh = _act_specs(mesh, rules, B, S, D)
+        if shape.mode == "train":
+            body = lambda p, a: fwd_fn(p, a)[0]
+            if rt.remat == "full":      # match the scanned body's recompute
+                body = jax.checkpoint(body)
+            def probe(params, x, _body=body):
+                y, vjp = jax.vjp(_body, params, x)
+                gp, gx = vjp(jnp.ones_like(y))
+                return (jnp.sum(y.astype(jnp.float32)),
+                        jax.tree.map(lambda t: t, gp), gx)
+            args = (pshapes, x_spec)
+            in_sh = (psh, x_sh)
+            out_sh = (NamedSharding(mesh, P()), psh, x_sh)
+        elif cache_unit is None:       # prefill: forward only
+            def probe(params, x):
+                return fwd_fn(params, x)[0]
+            args = (pshapes, x_spec)
+            in_sh = (psh, x_sh)
+            out_sh = x_sh
+        else:                          # decode
+            cshapes = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(
+                    s.shape, s.resolved_dtype(jnp.bfloat16)),
+                cache_unit, is_leaf=lambda t: isinstance(t, Spec))
+            csh = shardings_of_specs(mesh, rules, cache_unit)
+            pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
+            def probe(params, cache, x, pos):
+                return fwd_fn(params, x, cache=cache, pos=pos)
+            args = (pshapes, cshapes, x_spec, pos_spec)
+            in_sh = (psh, csh, x_sh, NamedSharding(mesh, P()))
+            out_sh = (x_sh, csh)
+        probes.append(ProbeBundle(name=name, multiplier=mult, bundle=StepBundle(
+            arch=arch, shape=shape, rt=rt, step_fn=probe, args_shapes=args,
+            in_shardings=in_sh, out_shardings=out_sh)))
+
+    if arch.is_encdec:
+        from repro.models import encdec as ed
+        # encoder body (runs in train/prefill only)
+        if shape.mode != "decode":
+            enc_specs = ed._attn_block_specs(arch, cross=False)
+            def enc_fwd(p, x):
+                h = L.layer_norm(x, p["ln1_s"], p["ln1_b"], arch.norm_eps)
+                x = x + ed._mha(p["attn"], h, h, arch, rt, causal=False)
+                h = L.layer_norm(x, p["ln2_s"], p["ln2_b"], arch.norm_eps)
+                return (x + L.gelu_mlp(p["mlp"], h, rt),)
+            # encoder runs at encoder_seq, not S — close enough only if we
+            # probe at the right length; build separately:
+            def make_enc():
+                pshapes = L.spec_shapes(enc_specs, rt.param_dtype)
+                psh = shardings_of_specs(mesh, rules, enc_specs)
+                x_spec, x_sh = _act_specs(mesh, rules, B, arch.encoder_seq, D)
+                if shape.mode == "train":
+                    def probe(params, x):
+                        y, vjp = jax.vjp(lambda p, a: enc_fwd(p, a)[0],
+                                         params, x)
+                        gp, gx = vjp(jnp.ones_like(y))
+                        return jnp.sum(y.astype(jnp.float32)), gp, gx
+                    out_sh = (NamedSharding(mesh, P()), psh, x_sh)
+                else:
+                    def probe(params, x):
+                        return enc_fwd(params, x)[0]
+                    out_sh = x_sh
+                probes.append(ProbeBundle(
+                    name="encoder", multiplier=arch.encoder_layers - 1,
+                    bundle=StepBundle(arch=arch, shape=shape, rt=rt,
+                                      step_fn=probe,
+                                      args_shapes=(pshapes, x_spec),
+                                      in_shardings=(psh, x_sh),
+                                      out_shardings=out_sh)))
+            make_enc()
+            dec_specs_u = ed._attn_block_specs(arch, cross=True)
+            def dec_fwd(p, x):
+                eps = arch.norm_eps
+                enc_out = x[:, : min(arch.encoder_seq, x.shape[1])]
+                h = L.layer_norm(x, p["ln1_s"], p["ln1_b"], eps)
+                x = x + ed._mha(p["attn"], h, h, arch, rt, causal=True)
+                h = L.layer_norm(x, p["lnx_s"], p["lnx_b"], eps)
+                x = x + ed._mha(p["xattn"], h, enc_out, arch, rt,
+                                causal=False)
+                h = L.layer_norm(x, p["ln2_s"], p["ln2_b"], eps)
+                return (x + L.gelu_mlp(p["mlp"], h, rt),)
+            make("decoder", arch.num_layers - 1, dec_fwd, dec_specs_u)
+        else:
+            model = build_model(arch)
+            dec_specs_u = ed._attn_block_specs(arch, cross=True)
+            cache_u = jax.tree.map(lambda s: s,
+                                   model.cache_specs(B, shape.seq_len))
+            # per-layer cache: strip the stacking dim
+            cache_unit = {
+                k: Spec(v.shape[1:], v.axes[1:], v.init, v.dtype)
+                for k, v in cache_u.items()}
+            def dec_step(p, x, cache=None, pos=None):
+                eps = arch.norm_eps
+                hd = arch.resolved_head_dim
+                h = L.layer_norm(x, p["ln1_s"], p["ln1_b"], eps)
+                a, cache2 = L.gqa_attention_decode(
+                    p["attn"], h, {"k": cache["k"], "v": cache["v"]}, pos,
+                    n_heads=arch.num_heads, n_kv=arch.num_kv_heads, hd=hd,
+                    rope_theta=arch.rope_theta, rt=rt)
+                x = x + a
+                h = L.layer_norm(x, p["lnx_s"], p["lnx_b"], eps)
+                qx, _, _ = L.gqa_project(p["xattn"], h, arch.num_heads,
+                                         arch.num_kv_heads, hd, rt)
+                ox = L.blocked_attention(
+                    qx, cache["xk"].astype(rt.compute_dtype),
+                    cache["xv"].astype(rt.compute_dtype), causal=False,
+                    kv_block=rt.attn_kv_block)
+                x = x + L.gqa_out(p["xattn"], ox, rt)
+                h = L.layer_norm(x, p["ln2_s"], p["ln2_b"], eps)
+                x = x + L.gelu_mlp(p["mlp"], h, rt)
+                new_c = dict(cache)
+                new_c.update(cache2)
+                return x, new_c
+            make("decoder", arch.num_layers - 1, dec_step, dec_specs_u,
+                 cache_unit=cache_unit)
+        return probes
+
+    model = build_model(arch)
+    for gi, g in enumerate(model.groups):
+        if g.repeats <= 1:
+            continue
+        unit_pspecs = [lm_mod.block_specs(arch, kind) for kind in g.unit]
+        if shape.mode != "decode":
+            def fwd(p, x, _g=g):
+                for kind, bp in zip(_g.unit, p):
+                    x = lm_mod.block_apply_train(arch, kind, bp, x, rt)
+                return (x,)
+            make(f"group{gi}", g.repeats - 1, fwd, unit_pspecs)
+        # decode is unrolled over layers (no scan), so the full program's
+        # cost analysis already counts every layer: no probes needed.
+
+    # whole-microbatch probe (gradient-accumulation scan body)
+    if shape.mode == "train" and microbatches > 1:
+        pspecs = model.param_specs()
+        pshapes = L.spec_shapes(pspecs, rt.param_dtype)
+        psh = shardings_of_specs(mesh, rules, pspecs)
+        micro_shape = dataclasses.replace(
+            shape, name=shape.name + "_micro", global_batch=B)
+        mb_specs = input_specs(arch, micro_shape)
+        mb_sh = input_shardings(mesh, rules, mb_specs)
+
+        def micro_probe(params, mb):
+            loss, grads = jax.value_and_grad(
+                lambda p: model.loss(p, mb, rt))(params)
+            return loss, grads
+        probes.append(ProbeBundle(
+            name="microbatch", multiplier=microbatches - 1,
+            bundle=StepBundle(arch=arch, shape=micro_shape, rt=rt,
+                              step_fn=micro_probe,
+                              args_shapes=(pshapes, mb_specs),
+                              in_shardings=(psh, mb_sh),
+                              out_shardings=(NamedSharding(mesh, P()), psh))))
+    return probes

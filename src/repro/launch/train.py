@@ -1,0 +1,135 @@
+"""Trainer CLI.
+
+Runs a real training loop (synthetic data pipeline -> jit'd train_step ->
+checkpoint manager) for any `--arch`, at smoke scale by default so it
+executes on CPU; on a TPU fleet the same path runs under
+`make_production_mesh()` with the dry-run's shardings.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --smoke \
+      --steps 60 --batch 8 --seq 128
+  PYTHONPATH=src python -m repro.launch.train --arch olmoe-1b-7b --smoke \
+      --steps 30 --resume
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.checkpoint import CheckpointManager
+from repro.data import SyntheticLMDataset, make_batch_iterator
+from repro.launch.steps import build_model, make_train_step
+from repro.models.layers import Runtime
+from repro.optim import adamw_init
+
+__all__ = ["train_loop", "main"]
+
+
+def train_loop(arch, *, steps: int, global_batch: int, seq_len: int,
+               ckpt_dir: str | None = None, resume: bool = False,
+               save_every: int = 0, lr: float = 3e-4, seed: int = 0,
+               microbatches: int = 1, log_every: int = 10,
+               compute_dtype=jnp.float32) -> dict:
+    rt = Runtime(compute_dtype=compute_dtype)
+    model = build_model(arch)
+    key = jax.random.PRNGKey(seed)
+    params = model.init(key, rt)
+    opt_state = adamw_init(params)
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+
+    step_fn = jax.jit(make_train_step(model, rt, base_lr=lr,
+                                      warmup_steps=max(steps // 10, 1),
+                                      total_steps=steps,
+                                      microbatches=microbatches),
+                      donate_argnums=(0, 1))
+
+    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    start_step = 0
+    if mgr and resume:
+        last = mgr.latest_step()
+        if last is not None:
+            params, opt_state = mgr.restore(last, (params, opt_state))
+            params = jax.tree.map(jnp.asarray, params)
+            opt_state = jax.tree.map(jnp.asarray, opt_state)
+            start_step = last
+            print(f"[train] resumed from step {start_step}")
+
+    extras = None
+    if arch.frontend == "vit_stub":
+        rng = np.random.default_rng(seed)
+        def extras(step):
+            return {"patch_embeds": rng.standard_normal(
+                (global_batch, arch.num_patches, arch.d_model),
+                dtype=np.float32)}
+        seq_text = seq_len - arch.num_patches
+    else:
+        seq_text = seq_len
+    if arch.is_encdec:
+        rng = np.random.default_rng(seed)
+        def extras(step):
+            return {"frames": rng.standard_normal(
+                (global_batch, arch.encoder_seq, arch.d_model),
+                dtype=np.float32)}
+
+    ds = SyntheticLMDataset(vocab_size=arch.vocab_size, seq_len=seq_text,
+                            global_batch=global_batch, seed=seed)
+    it = make_batch_iterator(ds, start_step=start_step, extras_fn=extras)
+
+    losses = []
+    t0 = time.time()
+    for step in range(start_step, steps):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if step % log_every == 0 or step == steps - 1:
+            dt = time.time() - t0
+            print(f"[train] step={step:5d} loss={loss:8.4f} "
+                  f"gnorm={float(metrics['grad_norm']):7.3f} "
+                  f"lr={float(metrics['lr']):.2e} ({dt:.1f}s)")
+        if mgr and save_every and (step + 1) % save_every == 0:
+            mgr.save(step + 1, (params, opt_state), blocking=False)
+    if mgr:
+        mgr.save(steps, (params, opt_state), blocking=True)
+    return {"losses": losses, "n_params": n_params,
+            "final_loss": losses[-1] if losses else float("nan"),
+            "params": params}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True, choices=list(configs.ARCH_NAMES))
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config (CPU scale)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--save-every", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    arch = configs.get_smoke(args.arch) if args.smoke \
+        else configs.get_arch(args.arch)
+    res = train_loop(arch, steps=args.steps, global_batch=args.batch,
+                     seq_len=args.seq, ckpt_dir=args.ckpt_dir,
+                     resume=args.resume, save_every=args.save_every,
+                     lr=args.lr, seed=args.seed,
+                     microbatches=args.microbatches)
+    print(f"[train] done: {res['n_params']/1e6:.2f}M params, "
+          f"loss {res['losses'][0]:.4f} -> {res['final_loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.models.config import ArchConfig, MLAConfig, MoEConfig
+from repro.models.layers import Runtime, Spec
+
+__all__ = ["ArchConfig", "MLAConfig", "MoEConfig", "Runtime", "Spec"]

@@ -1,0 +1,242 @@
+"""Encoder-decoder transformer (whisper-medium backbone).
+
+The conv frontend is a STUB per the assignment: `input_specs()` provides
+precomputed frame embeddings [B, S_enc, D] (what the two conv layers would
+produce from the mel spectrogram).  Encoder: bidirectional MHA + GELU MLP
+with learned positions.  Decoder: causal self-attention + cross-attention
+to the encoder output + GELU MLP.  Whisper uses LayerNorm and MHA
+(num_kv_heads == num_heads).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ArchConfig
+from repro.models.layers import Runtime, Spec
+
+Params = Any
+PyTree = Any
+
+__all__ = ["EncDecLM"]
+
+
+def _attn_block_specs(cfg: ArchConfig, cross: bool) -> Dict[str, Any]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    s = {
+        "ln1_s": Spec((d,), ("embed",), "ones"),
+        "ln1_b": Spec((d,), ("embed",), "zeros"),
+        "attn": L.gqa_specs(d, cfg.num_heads, cfg.num_kv_heads, hd, True),
+    }
+    if cross:
+        s["lnx_s"] = Spec((d,), ("embed",), "ones")
+        s["lnx_b"] = Spec((d,), ("embed",), "zeros")
+        s["xattn"] = L.gqa_specs(d, cfg.num_heads, cfg.num_kv_heads, hd, True)
+    s["ln2_s"] = Spec((d,), ("embed",), "ones")
+    s["ln2_b"] = Spec((d,), ("embed",), "zeros")
+    s["mlp"] = L.gelu_mlp_specs(d, cfg.d_ff)
+    return s
+
+
+def _proj(x: jax.Array, w: jax.Array, b, n: int, hd: int,
+          rt: Runtime) -> jax.Array:
+    cd = rt.compute_dtype
+    y = jnp.einsum("bsd,df->bsf", x, w.astype(cd),
+                   preferred_element_type=jnp.float32)
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    y = rt.shard(y.astype(cd), "batch", None, "qkv_fused")
+    return y.reshape(x.shape[0], x.shape[1], n, hd)
+
+
+def _mha(p: Params, xq: jax.Array, xkv: jax.Array, cfg: ArchConfig,
+         rt: Runtime, causal: bool) -> jax.Array:
+    """Whisper attention: no RoPE (learned absolute positions)."""
+    hd = cfg.resolved_head_dim
+    if xq is xkv:
+        q, k, v = L.gqa_project(p, xq, cfg.num_heads, cfg.num_kv_heads, hd,
+                                rt)
+    else:
+        q = _proj(xq, p["wq"], p.get("bq"), cfg.num_heads, hd, rt)
+        k = _proj(xkv, p["wk"], p.get("bk"), cfg.num_kv_heads, hd, rt)
+        v = _proj(xkv, p["wv"], p.get("bv"), cfg.num_kv_heads, hd, rt)
+    q = rt.shard(q, "batch", "attn_seq")
+    o = L.blocked_attention(q, k, v, causal=causal, kv_block=rt.attn_kv_block)
+    o = rt.shard(o, "batch", "attn_seq")
+    return L.gqa_out(p, o, rt)
+
+
+class EncDecLM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        from repro.models.lm import padded_vocab
+        self.v_pad = padded_vocab(cfg.vocab_size)
+
+    def _mask_pad(self, logits):
+        if self.v_pad == self.cfg.vocab_size:
+            return logits
+        pad = jnp.arange(self.v_pad) >= self.cfg.vocab_size
+        return jnp.where(pad, jnp.asarray(-1e9, logits.dtype), logits)
+
+    # ----------------------------------------------------------- param specs
+    def param_specs(self) -> PyTree:
+        cfg = self.cfg
+        d = cfg.d_model
+        enc_block = _attn_block_specs(cfg, cross=False)
+        dec_block = _attn_block_specs(cfg, cross=True)
+        return {
+            "embed": Spec((self.v_pad, d), ("vocab", "embed")),
+            "enc_pos": Spec((cfg.encoder_seq, d), (None, "embed"), "small"),
+            # sized to the largest assigned decode/prefill length (32k);
+            # whisper's native 448-token decoder table is extended the way
+            # production long-form serving does (learned-pos resize)
+            "dec_pos": Spec((32768, d), (None, "embed"), "small"),
+            "encoder": L.stack_specs(enc_block, cfg.encoder_layers),
+            "decoder": L.stack_specs(dec_block, cfg.num_layers),
+            "enc_norm_s": Spec((d,), ("embed",), "ones"),
+            "enc_norm_b": Spec((d,), ("embed",), "zeros"),
+            "dec_norm_s": Spec((d,), ("embed",), "ones"),
+            "dec_norm_b": Spec((d,), ("embed",), "zeros"),
+        }
+
+    def init(self, key: jax.Array, rt: Runtime) -> Params:
+        return L.init_params(self.param_specs(), key, rt.param_dtype)
+
+    # --------------------------------------------------------------- encoder
+    def encode(self, params: Params, frames: jax.Array,
+               rt: Runtime) -> jax.Array:
+        cfg = self.cfg
+        eps = cfg.norm_eps
+        S = frames.shape[1]
+        x = frames.astype(rt.compute_dtype) + \
+            params["enc_pos"][:S].astype(rt.compute_dtype)
+        x = rt.shard(x, "batch", None, None)
+
+        def body(x, p):
+            h = L.layer_norm(x, p["ln1_s"], p["ln1_b"], eps)
+            x = x + _mha(p["attn"], h, h, cfg, rt, causal=False)
+            h = L.layer_norm(x, p["ln2_s"], p["ln2_b"], eps)
+            x = x + L.gelu_mlp(p["mlp"], h, rt)
+            return x, None
+
+        if rt.remat == "full":
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["encoder"])
+        return L.layer_norm(x, params["enc_norm_s"], params["enc_norm_b"],
+                            eps)
+
+    # --------------------------------------------------------------- decoder
+    def forward(self, params: Params, batch: Dict[str, jax.Array],
+                rt: Runtime, last_only: bool = False) -> jax.Array:
+        cfg = self.cfg
+        eps = cfg.norm_eps
+        enc_out = self.encode(params, batch["frames"], rt)
+        tok = batch["tokens"]
+        S = tok.shape[1]
+        x = params["embed"].astype(rt.compute_dtype)[tok]
+        x = x + params["dec_pos"][:S].astype(rt.compute_dtype)
+        x = rt.shard(x, "batch", None, None)
+
+        def body(x, p):
+            h = L.layer_norm(x, p["ln1_s"], p["ln1_b"], eps)
+            x = x + _mha(p["attn"], h, h, cfg, rt, causal=True)
+            h = L.layer_norm(x, p["lnx_s"], p["lnx_b"], eps)
+            x = x + _mha(p["xattn"], h, enc_out, cfg, rt, causal=False)
+            h = L.layer_norm(x, p["ln2_s"], p["ln2_b"], eps)
+            x = x + L.gelu_mlp(p["mlp"], h, rt)
+            return x, None
+
+        if rt.remat == "full":
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["decoder"])
+        if last_only:
+            x = x[:, -1:]
+        x = L.layer_norm(x, params["dec_norm_s"], params["dec_norm_b"], eps)
+        logits = jnp.einsum("bsd,vd->bsv", x,
+                            params["embed"].astype(rt.compute_dtype),
+                            preferred_element_type=jnp.float32)
+        logits = self._mask_pad(logits.astype(rt.compute_dtype))
+        return rt.shard(logits, "batch", None, "vocab")
+
+    def loss(self, params: Params, batch: Dict[str, jax.Array],
+             rt: Runtime) -> jax.Array:
+        from repro.models.lm import cross_entropy
+        logits = self.forward(params, batch, rt)
+        return cross_entropy(logits[:, :-1], batch["tokens"][:, 1:],
+                             rt).mean()
+
+    # ---------------------------------------------------------------- decode
+    def cache_specs(self, batch: int, max_len: int) -> PyTree:
+        """Self-attn KV cache per decoder layer + static cross KV from the
+        (stubbed) encoder output."""
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        kv = cfg.num_kv_heads
+        per_layer = {
+            "k": Spec((batch, max_len, kv, hd),
+                      ("batch", "kv_seq", None, None), "zeros", "bf16"),
+            "v": Spec((batch, max_len, kv, hd),
+                      ("batch", "kv_seq", None, None), "zeros", "bf16"),
+            "xk": Spec((batch, cfg.encoder_seq, kv, hd),
+                       ("batch", None, None, None), "zeros", "bf16"),
+            "xv": Spec((batch, cfg.encoder_seq, kv, hd),
+                       ("batch", None, None, None), "zeros", "bf16"),
+        }
+        return L.stack_specs(per_layer, cfg.num_layers)
+
+    def init_cache(self, batch: int, max_len: int, rt: Runtime) -> PyTree:
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.resolved_dtype(jnp.bfloat16)),
+            self.cache_specs(batch, max_len),
+            is_leaf=lambda x: isinstance(x, Spec))
+
+    def decode_step(self, params: Params, cache: PyTree, token: jax.Array,
+                    pos: jax.Array, rt: Runtime
+                    ) -> Tuple[jax.Array, PyTree]:
+        cfg = self.cfg
+        eps = cfg.norm_eps
+        hd = cfg.resolved_head_dim
+        B = token.shape[0]
+        x = params["embed"].astype(rt.compute_dtype)[token]
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["dec_pos"], pos, 1, axis=0).astype(rt.compute_dtype)
+        x = rt.shard(x, "batch", None, None)
+
+        def body(x, pc):
+            p, c = pc
+            h = L.layer_norm(x, p["ln1_s"], p["ln1_b"], eps)
+            q, k_new, v_new = L.gqa_project(p["attn"], h, cfg.num_heads,
+                                            cfg.num_kv_heads, hd, rt)
+            k = L.kv_cache_write(c["k"], k_new, pos, rt)
+            v = L.kv_cache_write(c["v"], v_new, pos, rt)
+            k = rt.shard(k, "batch", "kv_seq")
+            v = rt.shard(v, "batch", "kv_seq")
+            o = L.blocked_attention(q, k.astype(rt.compute_dtype),
+                                    v.astype(rt.compute_dtype), causal=False,
+                                    kv_block=rt.attn_kv_block,
+                                    kv_len=pos + 1)
+            x = x + L.gqa_out(p["attn"], o, rt)
+            h = L.layer_norm(x, p["lnx_s"], p["lnx_b"], eps)
+            qx, _, _ = L.gqa_project(p["xattn"], h, cfg.num_heads,
+                                     cfg.num_kv_heads, hd, rt)
+            ox = L.blocked_attention(qx, c["xk"].astype(rt.compute_dtype),
+                                     c["xv"].astype(rt.compute_dtype),
+                                     causal=False, kv_block=rt.attn_kv_block)
+            x = x + L.gqa_out(p["xattn"], ox, rt)
+            h = L.layer_norm(x, p["ln2_s"], p["ln2_b"], eps)
+            x = x + L.gelu_mlp(p["mlp"], h, rt)
+            return x, {"k": k, "v": v, "xk": c["xk"], "xv": c["xv"]}
+
+        x, new_cache = jax.lax.scan(body, x, (params["decoder"], cache))
+        x = L.layer_norm(x, params["dec_norm_s"], params["dec_norm_b"], eps)
+        logits = jnp.einsum("bsd,vd->bsv", x,
+                            params["embed"].astype(rt.compute_dtype),
+                            preferred_element_type=jnp.float32)
+        logits = self._mask_pad(logits)
+        return rt.shard(logits, "batch", None, "vocab"), new_cache

@@ -1,0 +1,83 @@
+"""AdamW with global-norm clipping, as pure pytree functions.
+
+Optimizer moments inherit the parameter sharding specs (ZeRO-1 falls out of
+FSDP parameter sharding: with the "embed" logical axis mapped to the data
+mesh axis, each data shard holds only its slice of m/v — no replicated
+optimizer state).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array            # int32 scalar
+    mu: Params                 # first moment  (fp32, param-sharded)
+    nu: Params                 # second moment (fp32, param-sharded)
+
+
+def adamw_init(params: Params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros))
+
+
+def adamw_init_specs(param_specs: Any) -> Any:
+    """ShapeDtypeStruct tree for the optimizer state (dry-run)."""
+    zeros = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), param_specs)
+    return AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32), mu=zeros,
+                      nu=zeros)
+
+
+def clip_by_global_norm(grads: Params, max_norm: float
+                        ) -> Tuple[Params, jax.Array]:
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+def adamw_update(grads: Params, state: AdamWState, params: Params,
+                 lr: jax.Array, *, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.1,
+                 max_grad_norm: float = 1.0
+                 ) -> Tuple[Params, AdamWState, jax.Array]:
+    grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1.0 - b1) * g32
+        v_new = b2 * v + (1.0 - b2) * jnp.square(g32)
+        m_hat = m_new / bc1
+        v_hat = v_new / bc2
+        delta = m_hat / (jnp.sqrt(v_hat) + eps)
+        # decoupled weight decay only on matrices (ndim >= 2)
+        wd = weight_decay if p.ndim >= 2 else 0.0
+        p32 = p.astype(jnp.float32)
+        p_new = p32 - lr * (delta + wd * p32)
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_v = jax.tree.leaves(state.nu)
+    flat_p = jax.tree.leaves(params)
+    out = [upd(g, m, v, p)
+           for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, AdamWState(step=step, mu=new_m, nu=new_v), gnorm

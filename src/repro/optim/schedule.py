@@ -1,0 +1,24 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_schedule(step: jax.Array, *, base_lr: float, total_steps: int,
+                    min_frac: float = 0.1) -> jax.Array:
+    t = jnp.clip(step.astype(jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return base_lr * (min_frac + (1.0 - min_frac) * cos)
+
+
+def linear_warmup_cosine(step: jax.Array, *, base_lr: float,
+                         warmup_steps: int, total_steps: int,
+                         min_frac: float = 0.1) -> jax.Array:
+    warm = base_lr * jnp.minimum(
+        step.astype(jnp.float32) / max(warmup_steps, 1), 1.0)
+    decay = cosine_schedule(step - warmup_steps, base_lr=base_lr,
+                            total_steps=max(total_steps - warmup_steps, 1),
+                            min_frac=min_frac)
+    return jnp.where(step < warmup_steps, warm, decay)

@@ -1,0 +1,127 @@
+"""Unit tests for the paper's analytical cost model (§3)."""
+
+import numpy as np
+import pytest
+
+from repro.core.costmodel import (AccelConfig, BufferSimulator,
+                                  HardwareConstants, LoopOrder, Op, OpKind,
+                                  OpStream, evaluate_stream,
+                                  evaluate_stream_many, performance_gops)
+
+
+def test_table1_embeddings():
+    # depthwise: Nof = 1, repeats across channels
+    dw = Op.depthwise(nif=32, nix=28, niy=28, nkx=3, nky=3)
+    assert dw.nof == 1 and dw.repeat == 32
+    assert dw.macs == 32 * 3 * 3 * 26 * 26
+    # channel mixing: 1x1 kernel
+    cm = Op.channel_mixing(nif=32, nix=28, niy=28, nof=64)
+    assert cm.nkx == cm.nky == 1
+    assert cm.macs == 32 * 64 * 28 * 28
+    # matvec: row x col
+    mv = Op.matvec(col=512, row=1000)
+    assert mv.macs == 512 * 1000
+    # matmul: row1 x col1 x col2
+    mm = Op.matmul(col1=256, row1=64, col2=128)
+    assert mm.macs == 64 * 256 * 128
+
+
+def test_conv_macs_formula():
+    op = Op.conv2d(nif=3, nix=224, niy=224, nkx=7, nky=7, nof=64, s=2)
+    assert op.nox == (224 - 7) // 2 + 1
+    assert op.macs == 3 * 7 * 7 * op.nox * op.noy * 64
+
+
+def test_compute_cycles_ideal_at_full_unroll():
+    """With tiles == dims and unrolling covering a whole tile, compute
+    cycles collapse to 1 per (tile-step) -> N_MAC / unroll."""
+    op = Op.conv2d(nif=8, nix=10, niy=10, nkx=3, nky=3, nof=8)
+    cfg = AccelConfig(pe_group=64, mac_per_group=512,     # 32768 MACs
+                      tif=8, tix=10, tiy=10, tof=8,
+                      pif=8, pof=8, pox=4, poy=4, pkx=3, pky=3,
+                      bank_height=8192, bank_width=128,
+                      weight_banks_pg=16, act_banks_pg=16)
+    # unroll = 8*8*4*4*3*3 = 9216 <= 32768 MACs (Eq. 9 holds); one tile,
+    # inner latency = ceil(8/4)*ceil(8/4) = 4 cycles
+    bd = evaluate_stream(cfg, OpStream([op]))
+    assert bd.valid.all()
+    assert int(bd.compute_cycles[0]) == 4
+
+
+def test_eq9_mac_constraint_violation():
+    op = Op.conv2d(nif=64, nix=28, niy=28, nkx=3, nky=3, nof=64)
+    cfg = AccelConfig(pe_group=1, mac_per_group=16,   # only 16 MACs
+                      pif=64, pof=64, pox=4, poy=4, pkx=3, pky=3,
+                      tif=64, tix=28, tiy=28, tof=64)
+    _, valid, _ = evaluate_stream_many([cfg], OpStream([op]))
+    assert not valid[0]
+    gops = performance_gops([cfg], OpStream([op]))
+    assert gops[0] == 0.0            # paper: 0 GOPS on violation
+
+
+def test_buffer_constraints_eq10_12():
+    op = Op.conv2d(nif=256, nix=56, niy=56, nkx=3, nky=3, nof=256)
+    small = AccelConfig(bank_height=256, bank_width=16, weight_banks_pg=1,
+                        act_banks_pg=1, pe_group=1, tif=256, tix=56,
+                        tiy=56, tof=256)
+    _, valid, _ = evaluate_stream_many([small], OpStream([op]))
+    assert not valid[0]
+
+
+def test_memory_latency_scales_with_bandwidth():
+    op = Op.conv2d(nif=64, nix=56, niy=56, nkx=3, nky=3, nof=64)
+    base = AccelConfig(weight_banks_pg=1, act_banks_pg=1, bank_width=16,
+                       pe_group=4, mac_per_group=64, bank_height=8192)
+    wide = AccelConfig(weight_banks_pg=8, act_banks_pg=8, bank_width=128,
+                       pe_group=4, mac_per_group=64, bank_height=8192)
+    s = OpStream([op])
+    b1 = evaluate_stream(base, s)
+    b2 = evaluate_stream(wide, s)
+    assert b2.weight_cycles[0] < b1.weight_cycles[0]
+    assert b2.input_cycles[0] < b1.input_cycles[0]
+
+
+def test_total_latency_is_max_of_terms():
+    op = Op.conv2d(nif=32, nix=28, niy=28, nkx=3, nky=3, nof=32)
+    cfg = AccelConfig()
+    bd = evaluate_stream(cfg, OpStream([op]))
+    expect = max(bd.compute_cycles[0],
+                 max(bd.weight_cycles[0], bd.input_cycles[0]))
+    assert bd.total_cycles[0] == expect
+
+
+def test_loop_orders_change_memory_cost():
+    op = Op.conv2d(nif=128, nix=28, niy=28, nkx=3, nky=3, nof=512)
+    cfgs = [AccelConfig(loop_order=lo, tif=32, tix=14, tiy=14, tof=32)
+            for lo in LoopOrder]
+    _, _, parts = evaluate_stream_many(cfgs, OpStream([op]))
+    w = parts["weight"][:, 0]
+    assert len(set(w.tolist())) > 1        # orders differ
+
+
+def test_batch_extension():
+    """Batch unrolling (Fig. 2e) divides compute cycles; weight reuse
+    (Eq. 1) cuts weight traffic."""
+    op1 = Op.conv2d(nif=32, nix=28, niy=28, nkx=3, nky=3, nof=32, batch=8)
+    cfg_b1 = AccelConfig(pb=1, pe_group=64, mac_per_group=512)
+    cfg_b8 = AccelConfig(pb=8, pe_group=64, mac_per_group=512)
+    s = OpStream([op1])
+    c1 = evaluate_stream(cfg_b1, s)
+    c8 = evaluate_stream(cfg_b8, s)
+    assert c8.compute_cycles[0] * 8 == c1.compute_cycles[0]
+    assert c8.weight_cycles[0] <= c1.weight_cycles[0]
+
+
+def test_buffer_simulator_upper_bounds_ideal():
+    op = Op.conv2d(nif=64, nix=28, niy=28, nkx=3, nky=3, nof=64)
+    cfg = AccelConfig()
+    bd = evaluate_stream(cfg, OpStream([op]))
+    sim = BufferSimulator(cfg, n_blocks=16).simulate_op(op)
+    assert sim >= 0.5 * float(bd.total_cycles[0])
+
+
+def test_area_model_scales():
+    hw = HardwareConstants()
+    small = AccelConfig(pe_group=1, mac_per_group=16)
+    big = AccelConfig(pe_group=64, mac_per_group=512)
+    assert big.area(hw) > small.area(hw)

@@ -1,0 +1,59 @@
+"""Multi-step greedy optimizer (Algorithm 1)."""
+
+import numpy as np
+
+from repro.core import apps
+from repro.core.greedy import multi_step_greedy, optimize_for_app
+from repro.core.multiapp import AppSpec
+from repro.core.space import default_space
+
+
+def _spec(name="resnet"):
+    return AppSpec.from_graph(name, apps.build_app(name))
+
+
+def test_history_is_monotone_nondecreasing():
+    spec = _spec()
+    space = default_space()
+    res = multi_step_greedy(spec.stream, space, k=2, seed=1, max_rounds=8,
+                            peak_weight_bits=spec.peak_weight_bits,
+                            peak_input_bits=spec.peak_input_bits)
+    perfs = [p for _, p in res.history]
+    assert all(b >= a - 1e-9 for a, b in zip(perfs, perfs[1:]))
+    assert res.best_perf == perfs[-1]
+    assert res.best_perf > 0
+
+
+def test_best_respects_area_budget():
+    spec = _spec("inception")
+    space = default_space()
+    res = multi_step_greedy(spec.stream, space, k=2, seed=0, max_rounds=6,
+                            peak_input_bits=spec.peak_input_bits)
+    assert res.best.area(space.hw) <= space.area_budget
+
+
+def test_deterministic_given_seed():
+    spec = _spec("wdl")
+    space = default_space()
+    r1 = multi_step_greedy(spec.stream, space, k=2, seed=7, max_rounds=5)
+    r2 = multi_step_greedy(spec.stream, space, k=2, seed=7, max_rounds=5)
+    assert r1.best_perf == r2.best_perf
+    assert r1.best.asdict() == r2.best.asdict()
+
+
+def test_restarts_merge_evaluated_sets():
+    spec = _spec("wdl")
+    space = default_space()
+    res = optimize_for_app(spec.stream, space, k=2, restarts=3, seed=0,
+                           max_rounds=4)
+    assert len(res.evaluated) == len(res.evaluated_perf)
+    assert res.best_perf >= max(res.evaluated_perf) - 1e-9
+
+
+def test_k_scaling_explores_more():
+    spec = _spec("wdl")
+    space = default_space()
+    r1 = multi_step_greedy(spec.stream, space, k=1, seed=3, max_rounds=3)
+    r3 = multi_step_greedy(spec.stream, space, k=3, seed=3, max_rounds=3)
+    # pool grows multiplicatively with k (paper: exponential in k)
+    assert len(r3.evaluated) > len(r1.evaluated)

@@ -1,0 +1,89 @@
+"""Per-kernel shape/dtype sweeps vs. pure-jnp oracles (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(42)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("m,k,n", [(64, 64, 64), (200, 384, 136),
+                                   (128, 1024, 96), (33, 65, 17)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("tiles", [(64, 128, 64), (128, 64, 128)])
+def test_matmul_sweep(m, k, n, dtype, tiles):
+    k1, k2 = jax.random.split(KEY)
+    x = jax.random.normal(k1, (m, k), dtype)
+    y = jax.random.normal(k2, (k, n), dtype)
+    bm, bk, bn = tiles
+    out = ops.matmul(x, y, bm=bm, bk=bk, bn=bn, interpret=True)
+    want = ref.matmul_ref(x, y)
+    assert out.shape == want.shape and out.dtype == want.dtype
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("sq,skv,h,kv,hd", [
+    (64, 64, 4, 4, 32),        # MHA
+    (96, 96, 4, 2, 32),        # GQA 2:1
+    (128, 128, 8, 1, 16),      # MQA
+    (80, 48, 4, 4, 32),        # uneven, padded
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(sq, skv, h, kv, hd, causal):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = jax.random.normal(k1, (2, sq, h, hd), jnp.float32)
+    k = jax.random.normal(k2, (2, skv, kv, hd), jnp.float32)
+    v = jax.random.normal(k3, (2, skv, kv, hd), jnp.float32)
+    if causal and sq > skv:
+        pytest.skip("causal requires sq <= skv alignment here")
+    out = ops.flash_attention(q, k, v, causal=causal, bq=32, bkv=32,
+                              interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = jax.random.normal(k1, (1, 64, 2, 32), dtype)
+    k = jax.random.normal(k2, (1, 64, 2, 32), dtype)
+    v = jax.random.normal(k3, (1, 64, 2, 32), dtype)
+    out = ops.flash_attention(q, k, v, causal=True, bq=32, bkv=32,
+                              interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("b,s,w", [(1, 64, 128), (2, 100, 160),
+                                   (3, 257, 130)])
+@pytest.mark.parametrize("bs,bw", [(32, 128), (64, 256)])
+def test_rglru_scan_sweep(b, s, w, bs, bw):
+    k1, k2 = jax.random.split(KEY)
+    a = jax.random.uniform(k1, (b, s, w), jnp.float32, 0.6, 0.999)
+    bb = jax.random.normal(k2, (b, s, w), jnp.float32)
+    out = ops.rglru_scan(a, bb, bs=bs, bw=bw, interpret=True)
+    want = ref.rglru_scan_ref(a, bb)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_rglru_long_decay_stability():
+    """Long sequences with strong decay: no NaN/overflow in the doubling."""
+    a = jnp.full((1, 1024, 128), 0.999, jnp.float32)
+    b = jnp.ones((1, 1024, 128), jnp.float32)
+    out = ops.rglru_scan(a, b, bs=256, bw=128, interpret=True)
+    want = ref.rglru_scan_ref(a, b)
+    assert bool(jnp.isfinite(out).all())
+    np.testing.assert_allclose(np.asarray(out[:, -1]),
+                               np.asarray(want[:, -1]), rtol=1e-3)

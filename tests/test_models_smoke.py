@@ -1,0 +1,116 @@
+"""Deliverable (f): per-architecture reduced-config smoke tests — one
+forward/train step on CPU asserting output shapes and no NaNs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.launch.steps import build_model, make_train_step
+from repro.models.layers import Runtime
+from repro.optim import adamw_init
+
+RT = Runtime(compute_dtype=jnp.float32)
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, s=32):
+    batch = {}
+    if cfg.is_encdec:
+        batch["frames"] = jax.random.normal(
+            KEY, (b, cfg.encoder_seq, cfg.d_model))
+        batch["tokens"] = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+        return batch
+    if cfg.frontend == "vit_stub":
+        batch["patch_embeds"] = jax.random.normal(
+            KEY, (b, cfg.num_patches, cfg.d_model))
+    batch["tokens"] = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+    return batch
+
+
+@pytest.mark.parametrize("name", list(configs.ARCH_NAMES))
+def test_smoke_forward_shapes_and_finite(name):
+    cfg = configs.get_smoke(name)
+    model = build_model(cfg)
+    params = model.init(KEY, RT)
+    batch = _batch(cfg)
+    logits = model.forward(params, batch, RT)
+    b = batch["tokens"].shape[0]
+    s_total = batch["tokens"].shape[1] + (
+        cfg.num_patches if cfg.frontend == "vit_stub" else 0)
+    assert logits.shape[0] == b and logits.shape[1] == s_total
+    assert logits.shape[2] >= cfg.vocab_size          # padded vocab
+    assert bool(jnp.isfinite(logits[..., :cfg.vocab_size]).all())
+
+
+@pytest.mark.parametrize("name", list(configs.ARCH_NAMES))
+def test_smoke_train_step_no_nans(name):
+    cfg = configs.get_smoke(name)
+    model = build_model(cfg)
+    params = model.init(KEY, RT)
+    opt = adamw_init(params)
+    step = make_train_step(model, RT)
+    batch = _batch(cfg)
+    new_params, new_opt, metrics = step(params, opt, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    for leaf in jax.tree.leaves(new_params):
+        assert bool(jnp.isfinite(leaf).all())
+    # params actually moved
+    moved = any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(params),
+                        jax.tree.leaves(new_params)))
+    assert moved
+
+
+@pytest.mark.parametrize("name", list(configs.ARCH_NAMES))
+def test_smoke_decode_step(name):
+    cfg = configs.get_smoke(name)
+    model = build_model(cfg)
+    params = model.init(KEY, RT)
+    cache = model.init_cache(2, 64, RT)
+    tok = jnp.array([[3], [5]], jnp.int32)
+    logits, cache2 = model.decode_step(params, cache, tok, jnp.int32(0), RT)
+    assert logits.shape[0] == 2 and logits.shape[1] == 1
+    assert bool(jnp.isfinite(logits[..., :cfg.vocab_size]).all())
+    logits, _ = model.decode_step(params, cache2, tok, jnp.int32(1), RT)
+    assert bool(jnp.isfinite(logits[..., :cfg.vocab_size]).all())
+
+
+def test_full_configs_match_assignment():
+    """The exact assigned dimensions are encoded in each ARCH config."""
+    a = configs.get_arch("qwen2.5-32b")
+    assert (a.num_layers, a.d_model, a.num_heads, a.num_kv_heads,
+            a.d_ff, a.vocab_size) == (64, 5120, 40, 8, 27648, 152064)
+    a = configs.get_arch("deepseek-v2-lite-16b")
+    assert a.mla is not None and a.mla.kv_lora_rank == 512
+    assert a.moe.num_experts == 64 and a.moe.top_k == 6
+    assert a.moe.num_shared == 2
+    a = configs.get_arch("recurrentgemma-9b")
+    assert a.block_pattern == ("rglru", "rglru", "local_attn")
+    assert a.sub_quadratic
+    a = configs.get_arch("olmoe-1b-7b")
+    assert a.moe.num_experts == 64 and a.moe.top_k == 8
+    a = configs.get_arch("xlstm-1.3b")
+    assert a.block_pattern.count("mlstm") == 7
+    assert a.sub_quadratic
+    a = configs.get_arch("whisper-medium")
+    assert a.encoder_layers == 24 and a.num_layers == 24
+
+
+def test_param_counts_in_expected_range():
+    """Analytic parameter counts land near the advertised model sizes."""
+    expect = {
+        "qwen2-0.5b": (0.35e9, 0.7e9),
+        "qwen2.5-3b": (2.5e9, 4.0e9),
+        "qwen2.5-32b": (28e9, 37e9),
+        "mistral-nemo-12b": (10e9, 14e9),
+        "olmoe-1b-7b": (5.5e9, 8.5e9),
+        "deepseek-v2-lite-16b": (12e9, 19e9),
+        "recurrentgemma-9b": (7e9, 11e9),
+    }
+    for name, (lo, hi) in expect.items():
+        n = configs.get_arch(name).param_count()
+        assert lo <= n <= hi, f"{name}: {n/1e9:.2f}B not in [{lo},{hi}]"

@@ -1,0 +1,121 @@
+"""Chunkwise-parallel training forms vs. sequential decode recurrences."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers as L
+from repro.models.layers import Runtime
+
+KEY = jax.random.PRNGKey(11)
+
+
+def test_mlstm_chunkwise_matches_stepwise():
+    """The chunkwise mLSTM must equal the per-step recurrence."""
+    B, S, H, hd = 2, 33, 2, 16
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, H, hd))
+    v = jax.random.normal(ks[2], (B, S, H, hd))
+    log_i = jax.random.normal(ks[3], (B, S, H)) * 0.5
+    log_f = jax.nn.log_sigmoid(jax.random.normal(ks[4], (B, S, H)) + 2.0)
+
+    y_chunk, _ = L._mlstm_chunkwise(q, k, v, log_i, log_f, chunk=8)
+
+    # sequential reference (the decode recurrence)
+    scale = 1.0 / np.sqrt(hd)
+    C = jnp.zeros((B, H, hd, hd))
+    n = jnp.zeros((B, H, hd))
+    m = jnp.full((B, H), -1e30)
+    outs = []
+    for t in range(S):
+        m_new = jnp.maximum(log_f[:, t] + m, log_i[:, t])
+        w_f = jnp.exp(log_f[:, t] + m - m_new)
+        w_i = jnp.exp(log_i[:, t] - m_new)
+        C = C * w_f[..., None, None] + \
+            w_i[..., None, None] * k[:, t][..., :, None] * \
+            v[:, t][..., None, :]
+        n = n * w_f[..., None] + w_i[..., None] * k[:, t]
+        num = jnp.einsum("bhd,bhde->bhe", q[:, t] * scale, C)
+        den = jnp.abs(jnp.einsum("bhd,bhd->bh", q[:, t] * scale, n))
+        outs.append(num / jnp.maximum(den, jnp.exp(-m_new))[..., None])
+        m = m_new
+    y_seq = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_seq),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_rglru_train_matches_decode():
+    rt = Runtime(compute_dtype=jnp.float32)
+    D, W, H = 16, 32, 2
+    specs = L.rglru_specs(D, W, H, conv_w=4)
+    params = L.init_params(specs, KEY, jnp.float32)
+    B, S = 2, 9
+    x = jax.random.normal(jax.random.PRNGKey(2), (B, S, D)) * 0.5
+
+    y_train = L.rglru_block_train(params, x, n_heads=H, rt=rt)
+
+    state = {"h": jnp.zeros((B, W)), "conv": jnp.zeros((B, 3, W))}
+    outs = []
+    for t in range(S):
+        y, state = L.rglru_block_decode(params, x[:, t:t + 1], state,
+                                        n_heads=H, rt=rt)
+        outs.append(y[:, 0])
+    y_dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_train), np.asarray(y_dec),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_slstm_train_matches_decode():
+    rt = Runtime(compute_dtype=jnp.float32)
+    D, H = 16, 2
+    specs = L.slstm_specs(D, H)
+    params = L.init_params(specs, KEY, jnp.float32)
+    B, S = 2, 7
+    x = jax.random.normal(jax.random.PRNGKey(4), (B, S, D)) * 0.5
+
+    y_train = L.slstm_block_train(params, x, n_heads=H, eps=1e-6, rt=rt)
+
+    state = {"h": jnp.zeros((B, D)), "c": jnp.zeros((B, D)),
+             "n": jnp.zeros((B, D)), "m": jnp.full((B, D), -1e30)}
+    outs = []
+    for t in range(S):
+        y, state = L.slstm_block_decode(params, x[:, t:t + 1], state,
+                                        n_heads=H, eps=1e-6, rt=rt)
+        outs.append(y[:, 0])
+    y_dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_train), np.asarray(y_dec),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_blocked_attention_matches_dense():
+    from repro.kernels import ref
+    B, S, H, KV, hd = 2, 50, 4, 2, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    out = L.blocked_attention(q, k, v, causal=True, kv_block=16)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_local_block_attention_matches_masked_dense():
+    B, S, H, hd, w = 1, 40, 2, 8, 12
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, H, hd))
+    v = jax.random.normal(ks[2], (B, S, H, hd))
+    out = L.local_block_attention(q, k, v, window=w)
+    # dense reference with banded causal mask
+    s = jnp.einsum("bqhd,bshd->bhqs", q / np.sqrt(hd), k)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = (qpos >= kpos) & (qpos - kpos < w)
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    want = jnp.einsum("bhqs,bshd->bqhd", p, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)

@@ -1,0 +1,94 @@
+"""Roofline analysis utilities + DSE machinery on synthetic inputs."""
+
+import numpy as np
+import pytest
+
+from repro.core.autotune import ExecPoint, select_geomean_config
+from repro.core.kernel_tune import TileConfig, tile_cost, tune_matmul_tiles
+from repro.core.roofline import (HW, CollectiveStats, model_flops,
+                                 parse_collective_bytes,
+                                 roofline_from_totals)
+from repro import configs
+from repro.configs.shapes import shape_by_name
+
+
+def test_parse_collectives_kinds_and_tuples():
+    hlo = """
+  %ag = f32[16,128]{1,0} all-gather(%p0), dimensions={0}
+  %ar.1 = bf16[4,4]{1,0} all-reduce(%p1), to_apply=%add
+  %rs = (f32[8], f32[8]) reduce-scatter(%a, %b), dimensions={0}
+  %cp = u8[32]{0} collective-permute(%p2), source_target_pairs={{0,1}}
+  %a2a = f32[2,2]{1,0} all-to-all(%p3), dimensions={1}
+  %ar.s = f32[64]{0} all-reduce-start(%p4), to_apply=%add
+  %ar.d = f32[64]{0} all-reduce-done(%ar.s)
+"""
+    stats = parse_collective_bytes(hlo)
+    assert stats.by_kind["all-gather"] == 16 * 128 * 4
+    assert stats.by_kind["all-reduce"] == 4 * 4 * 2 + 64 * 4  # start counted
+    assert stats.by_kind["reduce-scatter"] == 2 * 8 * 4
+    assert stats.by_kind["collective-permute"] == 32
+    assert stats.by_kind["all-to-all"] == 16
+    assert stats.count == 6          # -done not double counted
+
+
+def test_roofline_bottleneck_selection():
+    coll = CollectiveStats()
+    coll.add("all-reduce", int(50e9))          # 1 s of ICI
+    rep = roofline_from_totals(
+        arch="x", shape="train_4k", mesh_name="16x16", chips=256,
+        flops=197e12 * 0.1, hbm_bytes=819e9 * 0.5, coll=coll,
+        peak_bytes=1e9, model_flops_total=197e12 * 0.1 * 256)
+    assert rep.compute_s == pytest.approx(0.1)
+    assert rep.memory_s == pytest.approx(0.5)
+    assert rep.collective_s == pytest.approx(1.0)
+    assert rep.bottleneck == "collective"
+    assert rep.useful_compute_ratio == pytest.approx(1.0)
+
+
+def test_model_flops_train_vs_decode():
+    arch = configs.get_arch("qwen2-0.5b")
+    tr = model_flops(arch, shape_by_name("train_4k"))
+    n = arch.param_count()
+    assert tr == pytest.approx(6 * n * 256 * 4096, rel=1e-6)
+    de = model_flops(arch, shape_by_name("decode_32k"))
+    assert de > 2 * n * 128          # includes attention-over-cache term
+
+
+def test_model_flops_moe_active_params():
+    arch = configs.get_arch("olmoe-1b-7b")
+    tr = model_flops(arch, shape_by_name("train_4k"))
+    dense_equiv = 6 * arch.param_count() * 256 * 4096
+    assert tr < dense_equiv          # only top-k experts active
+
+
+def test_exec_point_key_stable():
+    a = ExecPoint(microbatches=4)
+    b = ExecPoint(microbatches=4)
+    assert a.key() == b.key()
+    assert a.key() != ExecPoint(microbatches=8).key()
+
+
+def test_select_geomean_config():
+    records = {
+        "p1": {"a": 1.0, "b": 1.0},
+        "p2": {"a": 4.0, "b": 0.25},     # same geomean as p1
+        "p3": {"a": 2.0, "b": 2.0},      # winner
+        "p4": {"a": 9.0},                # incomplete -> excluded
+        "p5": {"a": 9.0, "b": 0.0},      # invalid somewhere -> excluded
+    }
+    key, geo = select_geomean_config(records)
+    assert key == "p3" and geo == pytest.approx(2.0)
+
+
+def test_kernel_tile_tuner_prefers_mxu_aligned():
+    best, cost, ranking = tune_matmul_tiles(4096, 4096, 4096)
+    assert best.bk % 128 == 0 and best.bn % 128 == 0
+    assert cost["latency_s"] <= ranking[-1][1]
+    # big square matmul should be compute-bound at the optimum
+    assert cost["compute_s"] >= cost["memory_s"] * 0.5
+
+
+def test_kernel_tile_cost_memory_bound_for_skinny():
+    """A skinny matmul (decode GEMV-like) must be memory-bound."""
+    best, cost, _ = tune_matmul_tiles(8, 4096, 4096)
+    assert cost["memory_s"] > cost["compute_s"]

@@ -1,0 +1,169 @@
+"""Checkpointing, data pipeline, optimizer, elastic coordinator."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.data import SyntheticLMDataset, make_batch_iterator
+from repro.launch.elastic import (ElasticConfig, ElasticCoordinator,
+                                  valid_data_parallel)
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm
+from repro.optim.schedule import linear_warmup_cosine
+
+
+# ------------------------------------------------------------- checkpoints
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last=2)
+    tree = {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": [jnp.ones((2,), jnp.int32), jnp.zeros((5,))]}
+    mgr.save(10, tree)
+    back = mgr.restore(10, tree)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last=2)
+    tree = {"x": jnp.zeros((2,))}
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree)
+    assert mgr.steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_checkpoint_async_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"x": jnp.arange(1000.0)}
+    mgr.save(5, tree, blocking=False)
+    mgr.wait()
+    assert mgr.latest_step() == 5
+    back = mgr.restore(5, tree)
+    np.testing.assert_array_equal(np.asarray(back["x"]),
+                                  np.asarray(tree["x"]))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"x": jnp.zeros((4,))})
+    with pytest.raises(ValueError):
+        mgr.restore(1, {"x": jnp.zeros((5,))})
+
+
+# -------------------------------------------------------------------- data
+
+def test_iterator_prefetch_and_order():
+    ds = SyntheticLMDataset(vocab_size=101, seq_len=8, global_batch=4,
+                            seed=1)
+    it = make_batch_iterator(ds, start_step=3)
+    b3 = next(it)
+    np.testing.assert_array_equal(b3["tokens"],
+                                  ds.global_batch_at(3)["tokens"])
+    b4 = next(it)
+    np.testing.assert_array_equal(b4["tokens"],
+                                  ds.global_batch_at(4)["tokens"])
+
+
+# --------------------------------------------------------------- optimizer
+
+def test_adamw_optimizes_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    opt = adamw_init(params)
+    lr = jnp.asarray(0.1)
+    for _ in range(200):
+        grads = {"w": 2.0 * params["w"]}
+        params, opt, _ = adamw_update(grads, opt, params, lr,
+                                      weight_decay=0.0)
+    assert float(jnp.abs(params["w"]).max()) < 0.2
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(grads, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    total = jnp.sqrt(sum(jnp.sum(x ** 2) for x in jax.tree.leaves(clipped)))
+    assert float(total) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_warmup_cosine_shape():
+    lrs = [float(linear_warmup_cosine(jnp.asarray(s), base_lr=1.0,
+                                      warmup_steps=10, total_steps=100))
+           for s in range(100)]
+    assert lrs[0] == 0.0
+    assert max(lrs) == pytest.approx(1.0, rel=1e-3)
+    assert lrs[-1] < 0.2
+
+
+# ----------------------------------------------------------------- elastic
+
+class _Fleet:
+    """Simulated fleet of hosts with injectable slow/failed hosts."""
+
+    def __init__(self, hosts):
+        self.hosts = hosts
+        self.slow = set()
+
+    def step(self, step, dp):
+        return [3.0 if h in self.slow else 1.0 for h in range(self.hosts)]
+
+
+def test_valid_data_parallel_divisibility():
+    assert valid_data_parallel(256, 16, 256) == 16
+    assert valid_data_parallel(240, 16, 256) == 8   # 15 !| 256 -> 8
+    assert valid_data_parallel(15, 16, 256) == 0
+
+
+def test_elastic_failure_restores_and_reshapes(tmp_path):
+    saved = []
+    cfg = ElasticConfig(total_hosts=8, model_parallel=4, chips_per_host=4,
+                        checkpoint_every=5)
+    co = ElasticCoordinator(cfg, global_batch=64,
+                            save_fn=lambda s: saved.append(s),
+                            restore_fn=lambda: saved[-1] if saved else 0)
+    fleet = _Fleet(8)
+    events = {12: lambda c: c.on_host_failure(3)}
+    st = co.run(fleet.step, total_steps=20, events=events)
+    assert st.step == 20
+    assert st.reshapes == 1 and st.restores == 1
+    assert st.healthy_hosts == 7
+    assert st.data_parallel == valid_data_parallel(28, 4, 64)
+
+
+def test_elastic_straggler_eviction():
+    saved = [0]
+    cfg = ElasticConfig(total_hosts=4, model_parallel=2, chips_per_host=4,
+                        checkpoint_every=100, straggler_patience=2)
+    co = ElasticCoordinator(cfg, global_batch=32,
+                            save_fn=lambda s: saved.append(s),
+                            restore_fn=lambda: saved[-1])
+
+    def step_fn(step, dp):
+        # the slow host disappears from the fleet once evicted
+        n = co.state.healthy_hosts
+        times = [1.0] * n
+        if co.state.evictions == 0 and step >= 5:
+            times[2] = 3.0
+        return times
+
+    st = co.run(step_fn, total_steps=12)
+    assert st.evictions == 1
+    assert st.healthy_hosts == 3
+    assert st.step == 12
+
+
+def test_elastic_scale_up():
+    saved = [0]
+    cfg = ElasticConfig(total_hosts=4, model_parallel=2, chips_per_host=4)
+    co = ElasticCoordinator(cfg, global_batch=32,
+                            save_fn=lambda s: saved.append(s),
+                            restore_fn=lambda: saved[-1])
+    dp0 = co.state.data_parallel
+    fleet = _Fleet(6)
+    events = {4: lambda c: c.on_host_join(2)}
+    st = co.run(fleet.step, total_steps=8, events=events)
+    assert st.data_parallel >= dp0
+    assert st.healthy_hosts == 6
