@@ -20,11 +20,13 @@ experiments/autotune/<cell>/ and summarized to experiments/perf_hillclimb.json.
 
 from __future__ import annotations
 
+import argparse
 import dataclasses
 import json
+import time
 from pathlib import Path
 
-from repro.core.autotune import CellEvaluator, ExecPoint, greedy_autotune
+from repro.core.autotune import CellEvaluator, ExecPoint, autotune_search
 
 OUT = Path(__file__).resolve().parents[1] / "experiments"
 
@@ -79,7 +81,8 @@ PAIRS = [
 ]
 
 
-def run(max_rounds: int = 4, verbose: bool = True) -> dict:
+def run(max_rounds: int = 4, verbose: bool = True,
+        engines: tuple = ("greedy",)) -> dict:
     results = {}
     for pair in PAIRS:
         cell = f"{pair['arch']}_{pair['shape']}"
@@ -109,22 +112,28 @@ def run(max_rounds: int = 4, verbose: bool = True) -> dict:
                 d = entry["probes"][name]["vs_baseline"]
                 print(f"[{cell}] {name}: score={sc:.4f} ({d:+.1%})")
 
-        log: list = []
-        best_pt, best_score = greedy_autotune(
-            ev, shape_mode=pair["mode"], has_moe=pair["moe"],
-            seed=0, max_rounds=max_rounds, init=pair["baseline"], log=log)
-        entry["greedy"] = {
-            "best_point": dataclasses.asdict(best_pt),
-            "best_score": best_score,
-            "vs_baseline": (best_score / base_score - 1.0)
-            if base_score else 0.0,
-            "n_compiles": ev.n_compiles,
-            "log": log,
-        }
-        if verbose:
-            print(f"[{cell}] greedy best={best_score:.4f} "
-                  f"({entry['greedy']['vs_baseline']:+.1%}) "
-                  f"compiles={ev.n_compiles}")
+        entry["search"] = {}
+        for engine in engines:
+            log: list = []
+            compiles_before = ev.n_compiles
+            best_pt, best_score = autotune_search(
+                ev, engine=engine, shape_mode=pair["mode"],
+                has_moe=pair["moe"], seed=0, max_rounds=max_rounds,
+                init=pair["baseline"], log=log)
+            entry["search"][engine] = {
+                "best_point": dataclasses.asdict(best_pt),
+                "best_score": best_score,
+                "vs_baseline": (best_score / base_score - 1.0)
+                if base_score else 0.0,
+                "n_compiles": ev.n_compiles - compiles_before,
+                "log": log,
+            }
+            if verbose:
+                print(f"[{cell}] {engine} best={best_score:.4f} "
+                      f"({entry['search'][engine]['vs_baseline']:+.1%}) "
+                      f"compiles={ev.n_compiles - compiles_before}")
+        if "greedy" in entry["search"]:       # legacy key for older readers
+            entry["greedy"] = entry["search"]["greedy"]
         results[cell] = entry
 
     OUT.mkdir(parents=True, exist_ok=True)
@@ -132,5 +141,54 @@ def run(max_rounds: int = 4, verbose: bool = True) -> dict:
     return results
 
 
+def run_smoke(engines: tuple = ("greedy", "anneal"),
+              verbose: bool = True, max_rounds: int = 8) -> dict:
+    """CI smoke: hillclimb the *analytical* accelerator space (no XLA
+    compiles) with each requested engine — seconds, not minutes — and
+    report best GOPS + shared-cache statistics."""
+    from repro.core import apps
+    from repro.core.multiapp import AppSpec
+    from repro.core.search import optimize_for_app
+    from repro.core.space import default_space
+
+    space = default_space()
+    spec = AppSpec.from_graph("resnet", apps.build_app("resnet"))
+    out = {}
+    for engine in engines:
+        t0 = time.time()
+        res = optimize_for_app(
+            spec.stream, space, engine=engine, k=2, restarts=2, seed=0,
+            peak_weight_bits=spec.peak_weight_bits,
+            peak_input_bits=spec.peak_input_bits, max_rounds=max_rounds,
+            engine_kwargs={"chains": 8, "population": 24, "batch": 32})
+        stats = res.evaluator.stats()
+        out[engine] = {"best_gops": res.best_perf,
+                       "n_evaluated": len(res.evaluated),
+                       "pareto_points": len(res.pareto_front()),
+                       "seconds": time.time() - t0, **stats}
+        if verbose:
+            print(f"[smoke] {engine:8s} best={res.best_perf:9.2f} GOPS  "
+                  f"evals={len(res.evaluated):5d}  "
+                  f"model_calls={stats['scored']:5d}  "
+                  f"cache_hits={stats['cache_hits']:4d}  "
+                  f"t={out[engine]['seconds']:.2f}s")
+        assert res.best_perf > 0, f"{engine}: no valid config found"
+    return out
+
+
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--engine", action="append", default=None,
+                    help="search engine(s) to run (repeatable); "
+                         "default: greedy")
+    ap.add_argument("--max-rounds", type=int, default=None,
+                    help="search rounds per engine (default: 4 full, "
+                         "8 smoke)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast analytical-space smoke (no XLA compiles)")
+    args = ap.parse_args()
+    engines = tuple(args.engine or ["greedy"])
+    if args.smoke:
+        run_smoke(engines, max_rounds=args.max_rounds or 8)
+    else:
+        run(max_rounds=args.max_rounds or 4, engines=engines)

@@ -2,22 +2,33 @@
 
 Optimizes an accelerator for three DNNs, picks the geometric-mean winner,
 and shows the sensitivity of the optimum to the application mix — the
-paper's core workflow end-to-end.
+paper's core workflow end-to-end.  The search strategy is pluggable:
 
-  PYTHONPATH=src python examples/dse_accelerator.py
+  PYTHONPATH=src python examples/dse_accelerator.py                   # greedy
+  PYTHONPATH=src python examples/dse_accelerator.py --engine genetic
+  PYTHONPATH=src python examples/dse_accelerator.py --engine anneal
+  PYTHONPATH=src python examples/dse_accelerator.py --engine random
 """
+
+import argparse
 
 from repro.core import apps
 from repro.core.multiapp import AppSpec, run_multiapp_study
+from repro.core.search import ENGINES
 from repro.core.sensitivity import radar_of_top_configs
 from repro.core.space import default_space
+
+ap = argparse.ArgumentParser(description=__doc__)
+ap.add_argument("--engine", choices=sorted(ENGINES), default="greedy",
+                help="search engine for the per-app DSE")
+args = ap.parse_args()
 
 space = default_space()
 names = ("resnet", "ptb", "wdl")
 specs = [AppSpec.from_graph(n, apps.build_app(n)) for n in names]
 
 res = run_multiapp_study(specs, space, k=2, restarts=2, seed=0,
-                         max_rounds=12)
+                         max_rounds=12, engine=args.engine)
 print(res.table4())
 print()
 print("geomean improvements vs per-app bests (Table 5):")
@@ -30,7 +41,7 @@ print("\nsensitivity: compute-bound (resnet) vs memory-bound (ptb) optima")
 for n in ("resnet", "ptb"):
     spec = AppSpec.from_graph(n, apps.build_app(n))
     radar = radar_of_top_configs(n, spec, space, k=2, restarts=2,
-                                 max_rounds=10)
+                                 max_rounds=10, engine=args.engine)
     vals = radar.values
     print(f"  {n:8s} macs={vals['mac_per_group']:.2f} "
           f"pe={vals['pe_group']:.2f} tif={vals['tif']:.2f} "

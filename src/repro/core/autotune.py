@@ -37,9 +37,11 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.roofline import HW, RooflineReport
+from repro.core.search import (DiscreteSpace, EngineSpec, FunctionEvaluator,
+                               filter_kwargs, make_engine, run_search)
 
-__all__ = ["ExecPoint", "EXEC_DOMAINS", "CellEvaluator", "greedy_autotune",
-           "select_geomean_config"]
+__all__ = ["ExecPoint", "EXEC_DOMAINS", "CellEvaluator", "exec_space",
+           "greedy_autotune", "autotune_search", "select_geomean_config"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,6 +129,68 @@ def _domains_for(shape_mode: str, has_moe: bool) -> Dict[str, Tuple]:
     if not has_moe:
         d["moe_group_size"] = (4096,)
     return d
+
+
+def exec_space(shape_mode: str = "train", has_moe: bool = False
+               ) -> DiscreteSpace:
+    """The TPU execution design space as a generic `DiscreteSpace`, so any
+    search engine ("anneal", "genetic", "random", ...) can drive it."""
+    return DiscreteSpace(domains=_domains_for(shape_mode, has_moe),
+                         make_config=lambda **kw: ExecPoint(**kw))
+
+
+def autotune_search(evaluator: CellEvaluator, *, engine: EngineSpec = "greedy",
+                    shape_mode: str = "train", has_moe: bool = False,
+                    seed: int = 0, max_rounds: int = 6,
+                    init: Optional[ExecPoint] = None,
+                    log: Optional[list] = None,
+                    **engine_kwargs) -> Tuple[ExecPoint, float]:
+    """Engine-pluggable autotuning of one cell.
+
+    "greedy" keeps the k=1 memoized-compile loop below (its budget model is
+    tuned for ~10-60 s evaluations); other engines run through the generic
+    driver with deliberately small population defaults — every scored point
+    is one XLA compile, memoized by `CellEvaluator` on disk and by
+    `FunctionEvaluator` in memory.
+    """
+    if engine == "greedy":
+        # same superset-tolerant kwarg handling make_engine gives the other
+        # engines: forward only what greedy_autotune understands
+        return greedy_autotune(evaluator, shape_mode=shape_mode,
+                               has_moe=has_moe, seed=seed,
+                               max_rounds=max_rounds, init=init, log=log,
+                               **filter_kwargs(greedy_autotune,
+                                               engine_kwargs))
+    space = exec_space(shape_mode, has_moe)
+    fev = FunctionEvaluator(evaluator.score)
+    kw: Dict[str, Any] = {"chains": 2, "population": 6, "batch": 4,
+                          "elite": 1, "max_rounds": max_rounds, "seed": seed}
+    kw.update(engine_kwargs)
+    if init is not None:
+        kw.setdefault("init", init)
+    eng = make_engine(engine, space, fev, **kw)
+    res = run_search(eng, fev)
+    best, best_perf = res.best, res.best_perf
+    if init is not None:
+        # engines without an `init` parameter (genetic, random) drop it in
+        # make_engine's kwarg filtering — score it explicitly so the
+        # starting point is always a candidate (memoized: free if an
+        # init-seeded engine already scored it)
+        init_score = fev.score_one(init)
+        if best is None or init_score > best_perf:
+            best, best_perf = init, init_score
+    if best is None:
+        raise ValueError(
+            f"{engine} search evaluated no candidates (max_rounds="
+            f"{max_rounds}); use max_rounds >= 1 or pass init=")
+    if log is not None:
+        log.append({"event": "search", "engine": res.engine,
+                    "rounds": res.rounds,
+                    "evaluated": [dataclasses.asdict(c)
+                                  for c in res.evaluated],
+                    "scores": res.evaluated_perf.tolist(),
+                    "best": dataclasses.asdict(best)})
+    return best, best_perf
 
 
 def greedy_autotune(evaluator: CellEvaluator, *, shape_mode: str = "train",

@@ -1,65 +1,33 @@
-"""Multi-step greedy optimizer (paper §4.3, Algorithm 1).
+"""Multi-step greedy optimizer (paper §4.3, Algorithm 1) — compat shim.
 
-Pseudocode reproduced verbatim from the paper:
+The implementation moved into the pluggable search subsystem
+(`repro.core.search`): the Algorithm-1 engine lives in
+`search/greedy.py`, scoring lives in the shared memoizing
+`search.Evaluator`, and the multi-restart driver is
+`search.optimize_for_app` (which also accepts `engine="anneal" |
+"genetic" | "random"`).
 
-    1:  Start with a random initial valid accelerator configuration
-    2:  do
-    3:      Pool <- [S0]
-    4:      Randomly pick k design variables (V0 ... V_{k-1})
-    5:      for i <- 0 to k-1 do
-    6:          for all S in Pool do
-    7:              for all possible values v of V_i do
-    8:                  S' <- S with V_i = v
-    9:                  Pool <- Pool + [S']
-    10:     S_max <- argmax P_S where S in Pool
-    11:     dP <- P_Smax - P_S0
-    12:     S0 <- S_max
-    13: while dP > dP_t
-
-The Pool grows multiplicatively with each of the k variables ("the search
-space increases exponentially with k") — this is what lets the method hop
-out of single-variable local optima.  Performance P_S is GOPS of the target
-operation stream under the analytical model; configurations that violate the
-area or buffer constraints score 0 (Fig. 7's zero-GOPS lines).
-
-Evaluation is fully vectorized: each Pool is scored with one
-`performance_gops` call over [|Pool|] configurations.
+This module keeps the original call surface — `multi_step_greedy`,
+`optimize_for_app`, `GreedyResult` — and reproduces the pre-refactor
+results bit-for-bit on a fixed seed (same RNG call sequence, same pool
+construction, same scores).
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Optional
 
-import numpy as np
-
-from repro.core.costmodel import (AccelConfig, HardwareConstants, OpStream,
-                                  performance_gops)
+from repro.core.costmodel import AccelConfig, OpStream
+from repro.core.search import (Evaluator, GreedyOptimizer, SearchResult,
+                               run_search)
+from repro.core.search import optimize_for_app as _optimize_for_app
 from repro.core.space import DesignSpace
 
 __all__ = ["GreedyResult", "multi_step_greedy", "optimize_for_app"]
 
-
-@dataclasses.dataclass
-class GreedyResult:
-    best: AccelConfig
-    best_perf: float
-    history: List[Tuple[AccelConfig, float]]       # per-round best
-    evaluated: List[AccelConfig]                   # every scored config
-    evaluated_perf: np.ndarray                     # aligned scores
-    rounds: int
-
-
-def _score_pool(pool: Sequence[AccelConfig], stream: OpStream,
-                space: DesignSpace, hw: HardwareConstants,
-                peak_weight_bits: int, peak_input_bits: int) -> np.ndarray:
-    perf = performance_gops(pool, stream, hw,
-                            peak_weight_bits, peak_input_bits)
-    # area constraint: out-of-budget configurations score 0
-    if space.area_budget > 0:
-        areas = np.asarray([c.area(hw) for c in pool])
-        perf = np.where(areas <= space.area_budget, perf, 0.0)
-    return perf
+# Backwards-compat alias: the old GreedyResult fields (best, best_perf,
+# history, evaluated, evaluated_perf, rounds) are all on SearchResult.
+GreedyResult = SearchResult
 
 
 def multi_step_greedy(
@@ -77,79 +45,15 @@ def multi_step_greedy(
 ) -> GreedyResult:
     """Algorithm 1.  `k` trades off optimality and per-round cost.
 
-    `patience=1` is the paper-verbatim stopping rule (stop on the first
-    round with dP <= dP_t).  Because each round sweeps a *random* k-subset
-    of variables, allowing a few unproductive rounds before stopping
-    (`patience>1`) explores more variable subsets from the same start; the
-    multi-restart driver uses patience=3.
-    """
-    hw = space.hw
-    rng = np.random.default_rng(seed)
-    if init is not None:
-        s0 = init
-    else:
-        # "Start with a random initial *valid* accelerator configuration":
-        # valid = area budget + Eq. 9-13 constraints on the target stream.
-        # A repair pass grows buffers to the peak-demand floors (Eq. 11/13)
-        # first — pure rejection sampling is hopeless for apps whose peak
-        # demands occupy most of the area budget (fasterRCNN, deeplab).
-        def _valid(cfg: AccelConfig) -> bool:
-            return float(_score_pool([cfg], stream, space, hw,
-                                     peak_weight_bits,
-                                     peak_input_bits)[0]) > 0.0
-
-        def _repair(cfg: AccelConfig) -> AccelConfig:
-            return space.repair_for_peaks(cfg, peak_weight_bits,
-                                          peak_input_bits)
-        s0 = space.sample(rng, validator=lambda c: _valid(_repair(c)))
-        s0 = _repair(s0)
-    p0 = float(_score_pool([s0], stream, space, hw,
-                           peak_weight_bits, peak_input_bits)[0])
-
-    history: List[Tuple[AccelConfig, float]] = [(s0, p0)]
-    evaluated: List[AccelConfig] = [s0]
-    evaluated_perf: List[float] = [p0]
-    rounds = 0
-    stale = 0
-
-    while rounds < max_rounds:
-        rounds += 1
-        pool: List[AccelConfig] = [s0]
-        variables = list(rng.choice(space.variables, size=k, replace=False))
-        for var in variables:                       # lines 5-9
-            new_pool = list(pool)
-            for s in pool:
-                for cand in space.neighbors_over(s, var):
-                    new_pool.append(cand)
-            pool = new_pool
-            if len(pool) > pool_cap:                # memory guard
-                # keep S0 plus a uniform subsample; the greedy argmax below
-                # is unaffected in expectation and the cap is never hit with
-                # the default space at k <= 3.
-                idx = rng.choice(len(pool) - 1, size=pool_cap - 1,
-                                 replace=False) + 1
-                pool = [pool[0]] + [pool[i] for i in idx]
-
-        perf = _score_pool(pool, stream, space, hw,
-                           peak_weight_bits, peak_input_bits)
-        evaluated.extend(pool)
-        evaluated_perf.extend(perf.tolist())
-
-        i_max = int(np.argmax(perf))                # line 10
-        delta = float(perf[i_max]) - p0             # line 11
-        s0, p0 = pool[i_max], float(perf[i_max])    # line 12
-        history.append((s0, p0))
-        if delta <= delta_p_threshold * max(p0, 1e-12):   # line 13
-            stale += 1
-            if stale >= patience:
-                break
-        else:
-            stale = 0
-
-    return GreedyResult(best=s0, best_perf=p0, history=history,
-                        evaluated=evaluated,
-                        evaluated_perf=np.asarray(evaluated_perf),
-                        rounds=rounds)
+    Thin wrapper over `search.GreedyOptimizer` + `search.Evaluator`."""
+    evaluator = Evaluator.for_space(stream, space,
+                                    peak_weight_bits=peak_weight_bits,
+                                    peak_input_bits=peak_input_bits)
+    engine = GreedyOptimizer(space, evaluator, k=k,
+                             delta_p_threshold=delta_p_threshold,
+                             max_rounds=max_rounds, seed=seed, init=init,
+                             pool_cap=pool_cap, patience=patience)
+    return run_search(engine, evaluator)
 
 
 def optimize_for_app(
@@ -162,25 +66,9 @@ def optimize_for_app(
     peak_input_bits: int = 0,
     max_rounds: int = 40,
 ) -> GreedyResult:
-    """Multi-start wrapper: the paper restarts from random initial points to
-    avoid local optima; we merge the evaluated sets so top-10 % candidate
-    selection (§5.1) sees every scored configuration."""
-    best: Optional[GreedyResult] = None
-    all_cfg: List[AccelConfig] = []
-    all_perf: List[float] = []
-    total_rounds = 0
-    for r in range(restarts):
-        res = multi_step_greedy(stream, space, k=k, seed=seed + 1000 * r,
-                                peak_weight_bits=peak_weight_bits,
-                                peak_input_bits=peak_input_bits,
-                                max_rounds=max_rounds, patience=3)
-        all_cfg.extend(res.evaluated)
-        all_perf.extend(res.evaluated_perf.tolist())
-        total_rounds += res.rounds
-        if best is None or res.best_perf > best.best_perf:
-            best = res
-    assert best is not None
-    return GreedyResult(best=best.best, best_perf=best.best_perf,
-                        history=best.history, evaluated=all_cfg,
-                        evaluated_perf=np.asarray(all_perf),
-                        rounds=total_rounds)
+    """Multi-start greedy (see `search.optimize_for_app` for the engine-
+    generic version)."""
+    return _optimize_for_app(stream, space, k=k, restarts=restarts,
+                             seed=seed, peak_weight_bits=peak_weight_bits,
+                             peak_input_bits=peak_input_bits,
+                             max_rounds=max_rounds, engine="greedy")

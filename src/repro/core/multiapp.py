@@ -23,7 +23,7 @@ import numpy as np
 from repro.core.costmodel import (AccelConfig, HardwareConstants, OpStream,
                                   performance_gops)
 from repro.core.graph import ComputationGraph
-from repro.core.greedy import GreedyResult, optimize_for_app
+from repro.core.search import (EngineSpec, SearchResult, optimize_for_app)
 from repro.core.space import DesignSpace
 
 __all__ = ["AppSpec", "MultiAppResult", "run_multiapp_study"]
@@ -70,7 +70,7 @@ class MultiAppResult:
     improvements: np.ndarray                       # Table 5 (over each best)
     improvements_valid: np.ndarray                 # Table 5b (vs valid best)
     candidates_per_app: Dict[str, List[AccelConfig]]
-    greedy_results: Dict[str, GreedyResult]
+    greedy_results: Dict[str, SearchResult]   # per-app DSE result (any engine)
 
     def table4(self) -> str:
         hdr = ["app"] + [f"best_on_{a}" for a in self.apps] + ["selected"]
@@ -102,12 +102,17 @@ def run_multiapp_study(
     top_frac: float = 0.10,
     max_candidates_per_app: int = 200,
     max_rounds: int = 40,
+    engine: EngineSpec = "greedy",
+    engine_kwargs: Optional[Dict] = None,
 ) -> MultiAppResult:
+    """`engine` selects the per-app DSE strategy by name or factory
+    ("greedy" | "anneal" | "genetic" | "random", see `repro.core.search`);
+    the default reproduces the paper's multi-step greedy pipeline."""
     hw = space.hw
     apps = [s.name for s in specs]
 
     # 1-2: per-app DSE + top-10 % candidate selection
-    greedy_results: Dict[str, GreedyResult] = {}
+    greedy_results: Dict[str, SearchResult] = {}
     candidates: Dict[str, List[AccelConfig]] = {}
     best_per_app: Dict[str, AccelConfig] = {}
     best_perf_per_app: Dict[str, float] = {}
@@ -116,7 +121,8 @@ def run_multiapp_study(
                                seed=seed + 7919 * i,
                                peak_weight_bits=spec.peak_weight_bits,
                                peak_input_bits=spec.peak_input_bits,
-                               max_rounds=max_rounds)
+                               max_rounds=max_rounds, engine=engine,
+                               engine_kwargs=engine_kwargs)
         greedy_results[spec.name] = res
         best_per_app[spec.name] = res.best
         best_perf_per_app[spec.name] = res.best_perf

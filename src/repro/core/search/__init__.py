@@ -1,0 +1,190 @@
+"""Pluggable batched search engines for design-space exploration.
+
+The paper casts accelerator design as a multi-dimensional optimization
+problem solved by a search loop over an analytical cost model (§4.3,
+Algorithm 1).  This package makes the *search strategy* a pluggable
+component so every consumer (`multiapp.py`, `sensitivity.py`,
+`autotune.py`, the benchmarks and examples) can swap engines by name.
+
+The Optimizer interface
+=======================
+
+Every engine is an ask/tell `Optimizer` (see `base.py`)::
+
+    class Optimizer:
+        def propose(self) -> List[config]:
+            '''Next pool of candidates to score (may be empty to stop).'''
+        def observe(self, pool, scores: np.ndarray) -> None:
+            '''Scores for the pool just proposed; update internal state.'''
+        @property
+        def done(self) -> bool:
+            '''True once converged / budget exhausted.'''
+
+plus bookkeeping attributes maintained by the engine as it observes:
+``best``, ``best_perf``, ``history`` (per-round incumbent) and ``rounds``.
+
+The driver is deliberately dumb::
+
+    while not engine.done:
+        pool = engine.propose()
+        scores = evaluator(pool)        # ONE batched cost-model call
+        engine.observe(pool, scores)
+
+`run_search(engine, evaluator)` implements exactly this loop and returns a
+`SearchResult` (best / history / every evaluated config + score — the
+top-10 % candidate selection of §5.1 consumes the full log).
+
+The shared Evaluator
+====================
+
+`Evaluator` (see `evaluator.py`) scores candidate pools through one batched
+`evaluate_stream_many` call and memoizes by config hash in an LRU cache, so
+repeated points — across rounds, restarts, and even different engines
+sharing one evaluator — are never re-scored.  `FunctionEvaluator` gives the
+same pool interface over an arbitrary scalar scorer (e.g. compile-and-
+measure cells in `core/autotune.py`).
+
+Engines
+=======
+
+============  ==========================================================
+``greedy``    Multi-step greedy, Algorithm 1 verbatim (bit-for-bit port
+              of the original `multi_step_greedy`).
+``anneal``    Simulated annealing: `chains` parallel Metropolis walkers,
+              single-variable moves, geometric cooling.
+``genetic``   Evolutionary search over the power-of-two domains:
+              tournament selection, uniform crossover, random-reset
+              mutation, elitism; population kept as a struct-of-arrays
+              index matrix (`SpaceCodec`).
+``random``    Uniform random draws (validity-repaired) — the baseline.
+============  ==========================================================
+
+Multi-objective mode
+====================
+
+Any `SearchResult` exposes `pareto_front()` — the non-dominated
+(GOPS up, area down) subset of every config the run evaluated — so a
+perf/area trade-off curve costs nothing beyond the search itself.
+
+Typical use::
+
+    from repro.core.search import optimize_for_app
+    res = optimize_for_app(stream, space, engine="genetic", seed=0)
+    print(res.best, res.best_perf)
+    for pt in res.pareto_front():
+        print(pt.perf, pt.area)
+"""
+
+from __future__ import annotations
+
+import inspect
+from typing import Any, Callable, Dict, List, Optional, Union
+
+import numpy as np
+
+from repro.core.search.base import (DiscreteSpace, Optimizer, ParetoPoint,
+                                    SearchResult, SpaceCodec,
+                                    pareto_front_indices, run_search)
+from repro.core.search.evaluator import (Evaluator, FunctionEvaluator,
+                                         config_key)
+from repro.core.search.greedy import GreedyOptimizer
+from repro.core.search.anneal import AnnealOptimizer
+from repro.core.search.genetic import GeneticOptimizer
+from repro.core.search.random_search import RandomSearchOptimizer
+
+__all__ = [
+    "Optimizer", "SearchResult", "ParetoPoint", "run_search",
+    "SpaceCodec", "DiscreteSpace", "pareto_front_indices",
+    "Evaluator", "FunctionEvaluator", "config_key",
+    "GreedyOptimizer", "AnnealOptimizer", "GeneticOptimizer",
+    "RandomSearchOptimizer",
+    "ENGINES", "EngineSpec", "filter_kwargs", "make_engine",
+    "optimize_for_app",
+]
+
+ENGINES: Dict[str, type] = {
+    "greedy": GreedyOptimizer,
+    "anneal": AnnealOptimizer,
+    "genetic": GeneticOptimizer,
+    "random": RandomSearchOptimizer,
+}
+
+EngineSpec = Union[str, Callable[..., Optimizer]]
+
+
+def filter_kwargs(fn: Callable, kwargs: Dict[str, Any]) -> Dict[str, Any]:
+    """Drop keyword arguments `fn` does not accept (superset tolerance:
+    callers may pass a union of every engine's knobs; each callee takes
+    what it understands).  No-op if `fn` takes **kwargs."""
+    params = inspect.signature(fn).parameters
+    if any(p.kind == inspect.Parameter.VAR_KEYWORD for p in params.values()):
+        return dict(kwargs)
+    return {k: v for k, v in kwargs.items() if k in params}
+
+
+def make_engine(engine: EngineSpec, space, evaluator, **kwargs) -> Optimizer:
+    """Instantiate an engine from a name or factory.
+
+    Keyword arguments the engine's constructor does not accept are dropped
+    (`filter_kwargs`), so callers can pass a superset (e.g. greedy's
+    `k`/`patience` alongside genetic's `population`) and each engine takes
+    what it understands.
+    """
+    if isinstance(engine, str):
+        if engine not in ENGINES:
+            raise ValueError(f"unknown engine {engine!r}; available: "
+                             f"{sorted(ENGINES)}")
+        factory = ENGINES[engine]
+    else:
+        factory = engine
+    return factory(space, evaluator, **filter_kwargs(factory, kwargs))
+
+
+def optimize_for_app(
+    stream,
+    space,
+    k: int = 3,
+    restarts: int = 4,
+    seed: int = 0,
+    peak_weight_bits: int = 0,
+    peak_input_bits: int = 0,
+    max_rounds: int = 40,
+    engine: EngineSpec = "greedy",
+    engine_kwargs: Optional[Dict[str, Any]] = None,
+    evaluator: Optional[Evaluator] = None,
+) -> SearchResult:
+    """Multi-start wrapper: the paper restarts from random initial points to
+    avoid local optima; we merge the evaluated sets so top-10 % candidate
+    selection (§5.1) sees every scored configuration.
+
+    One `Evaluator` (and hence one LRU cache) is shared across all
+    restarts, so configurations revisited by different starts are scored
+    exactly once.  With the default `engine="greedy"` this reproduces the
+    pre-refactor `repro.core.greedy.optimize_for_app` bit-for-bit.
+    """
+    if evaluator is None:
+        evaluator = Evaluator.for_space(stream, space,
+                                        peak_weight_bits=peak_weight_bits,
+                                        peak_input_bits=peak_input_bits)
+    kw: Dict[str, Any] = {"k": k, "patience": 3, "max_rounds": max_rounds}
+    kw.update(engine_kwargs or {})
+    seed = kw.pop("seed", seed)       # engine_kwargs may override the base
+    best: Optional[SearchResult] = None
+    all_cfg: List[Any] = []
+    all_perf: List[float] = []
+    total_rounds = 0
+    for r in range(restarts):
+        eng = make_engine(engine, space, evaluator,
+                          seed=seed + 1000 * r, **kw)
+        res = run_search(eng, evaluator)
+        all_cfg.extend(res.evaluated)
+        all_perf.extend(res.evaluated_perf.tolist())
+        total_rounds += res.rounds
+        if best is None or res.best_perf > best.best_perf:
+            best = res
+    assert best is not None
+    return SearchResult(best=best.best, best_perf=best.best_perf,
+                        history=best.history, evaluated=all_cfg,
+                        evaluated_perf=np.asarray(all_perf),
+                        rounds=total_rounds, engine=best.engine,
+                        evaluator=evaluator)

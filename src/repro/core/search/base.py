@@ -1,0 +1,312 @@
+"""Optimizer interface, search driver, and discrete-space plumbing.
+
+See the package docstring (`repro.core.search`) for the contract.  The key
+pieces here:
+
+  * `Optimizer`      — the propose / observe / done interface every engine
+                       implements.
+  * `run_search`     — the driver loop: score each proposed pool through the
+                       shared `Evaluator` and feed the scores back.
+  * `SearchResult`   — uniform result record (drop-in replacement for the
+                       old `GreedyResult`), including Pareto-front
+                       extraction for multi-objective (GOPS vs. area) use.
+  * `SpaceCodec`     — vectorized config <-> index-array conversion so
+                       population engines manipulate struct-of-arrays, not
+                       lists of dataclasses.
+  * `DiscreteSpace`  — minimal generic space (ordered discrete domains +
+                       config constructor) so the same engines drive spaces
+                       other than the accelerator one (e.g. the TPU
+                       execution space in `core/autotune.py`).
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple)
+
+import numpy as np
+
+__all__ = ["Optimizer", "SearchResult", "ParetoPoint", "run_search",
+           "SpaceCodec", "DiscreteSpace", "pareto_front_indices"]
+
+
+# --------------------------------------------------------------------------
+# Vectorized config <-> index-array conversion
+# --------------------------------------------------------------------------
+
+class SpaceCodec:
+    """Bijective map between config objects and int index arrays [N, V].
+
+    Column `j` of the array indexes `domains[variables[j]]`.  Engines that
+    work on populations (genetic, annealing chains, random batches) keep the
+    index representation and only decode when a pool must be scored.
+    """
+
+    def __init__(self, domains: Dict[str, Sequence],
+                 make_config: Callable[..., Any]):
+        self.variables: List[str] = list(domains.keys())
+        self.domains: Dict[str, Tuple] = {k: tuple(v)
+                                          for k, v in domains.items()}
+        self.make_config = make_config
+        self.sizes = np.asarray([len(self.domains[v])
+                                 for v in self.variables], dtype=np.int64)
+        self._index_of = [
+            {val: i for i, val in enumerate(self.domains[v])}
+            for v in self.variables
+        ]
+
+    @property
+    def n_vars(self) -> int:
+        return len(self.variables)
+
+    def encode(self, configs: Sequence[Any]) -> np.ndarray:
+        """configs -> [N, V] domain-index array (struct-of-arrays view)."""
+        n = len(configs)
+        out = np.empty((n, self.n_vars), dtype=np.int64)
+        for j, var in enumerate(self.variables):
+            lut = self._index_of[j]
+            out[:, j] = [lut[getattr(c, var)] for c in configs]
+        return out
+
+    def decode(self, idx: np.ndarray) -> List[Any]:
+        """[N, V] domain-index array -> config objects."""
+        idx = np.asarray(idx, dtype=np.int64)
+        cols = [
+            [self.domains[var][i] for i in idx[:, j]]
+            for j, var in enumerate(self.variables)
+        ]
+        return [
+            self.make_config(**{var: cols[j][r]
+                                for j, var in enumerate(self.variables)})
+            for r in range(idx.shape[0])
+        ]
+
+    def sample_indices(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        """Uniform random [n, V] index population."""
+        return rng.integers(self.sizes[None, :], size=(n, self.n_vars))
+
+    def snap(self, cfg: Any) -> Any:
+        """Return `cfg` with any out-of-domain field replaced by the nearest
+        domain value (first value for non-numeric fields), so it encodes.
+
+        Needed for user-supplied `init` points whose fields fall outside a
+        mode-restricted space (e.g. a train-shaped ExecPoint baseline on a
+        decode cell)."""
+        kwargs = {}
+        changed = False
+        for j, var in enumerate(self.variables):
+            val = getattr(cfg, var)
+            if val in self._index_of[j]:
+                kwargs[var] = val
+            else:
+                dom = self.domains[var]
+                try:
+                    kwargs[var] = min(dom, key=lambda d: abs(d - val))
+                except TypeError:
+                    kwargs[var] = dom[0]
+                changed = True
+        return self.make_config(**kwargs) if changed else cfg
+
+    def mutate_indices(self, rng: np.random.Generator, idx: np.ndarray,
+                       rate: float) -> np.ndarray:
+        """Random-reset mutation: each gene is redrawn with prob `rate`."""
+        mask = rng.random(idx.shape) < rate
+        fresh = rng.integers(self.sizes[None, :], size=idx.shape)
+        return np.where(mask, fresh, idx)
+
+
+@dataclasses.dataclass
+class DiscreteSpace:
+    """Generic ordered-discrete design space.
+
+    The engines only need: `variables`, `domains`, `sample`,
+    `neighbors_over`, and a codec.  `repro.core.space.DesignSpace` offers the
+    same surface (plus accelerator-specific validity repair); this class
+    adapts any other domain dict — e.g. the TPU execution space — to the
+    engines.
+    """
+
+    domains: Dict[str, Tuple]
+    make_config: Callable[..., Any]
+
+    @property
+    def variables(self) -> List[str]:
+        return list(self.domains.keys())
+
+    def codec(self) -> SpaceCodec:
+        return SpaceCodec(self.domains, self.make_config)
+
+    def sample(self, rng: np.random.Generator, max_tries: int = 1000,
+               validator=None) -> Any:
+        for _ in range(max_tries):
+            kwargs = {k: v[int(rng.integers(len(v)))]
+                      for k, v in self.domains.items()}
+            cfg = self.make_config(**kwargs)
+            if validator is not None and not validator(cfg):
+                continue
+            return cfg
+        raise RuntimeError("could not sample a valid configuration")
+
+    def neighbors_over(self, cfg: Any, variable: str) -> List[Any]:
+        return [dataclasses.replace(cfg, **{variable: v})
+                for v in self.domains[variable]]
+
+
+def codec_for(space: Any) -> SpaceCodec:
+    """Codec for either a DesignSpace (accelerator) or a DiscreteSpace."""
+    fn = getattr(space, "codec", None)
+    if fn is not None:
+        return fn()
+    raise TypeError(f"space {type(space).__name__} has no codec()")
+
+
+def repair_with(space: Any, evaluator: Any, cfg: Any) -> Any:
+    """Apply the space's validity repair if it has one (Eq. 11/13 buffer
+    floors + area budget for the accelerator space; identity otherwise)."""
+    fn = getattr(space, "repair_for_peaks", None)
+    if fn is None:
+        return cfg
+    return fn(cfg, getattr(evaluator, "peak_weight_bits", 0),
+              getattr(evaluator, "peak_input_bits", 0))
+
+
+# --------------------------------------------------------------------------
+# Results
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ParetoPoint:
+    """One non-dominated (performance, area) design point."""
+
+    config: Any
+    perf: float
+    area: float
+
+
+def pareto_front_indices(perf: np.ndarray, area: np.ndarray) -> List[int]:
+    """Indices of the non-dominated set for (maximize perf, minimize area).
+
+    Zero-performance (constraint-violating) points never enter the front.
+    """
+    perf = np.asarray(perf, dtype=np.float64)
+    area = np.asarray(area, dtype=np.float64)
+    cand = np.flatnonzero(perf > 0)
+    if cand.size == 0:
+        return []
+    # sweep by ascending area; a point joins the front iff it beats the best
+    # perf seen at any smaller-or-equal area
+    order = cand[np.lexsort((-perf[cand], area[cand]))]
+    front: List[int] = []
+    best = -np.inf
+    for i in order:
+        if perf[i] > best:
+            front.append(int(i))
+            best = perf[i]
+    return front
+
+
+@dataclasses.dataclass
+class SearchResult:
+    """Uniform search outcome (drop-in replacement for old `GreedyResult`)."""
+
+    best: Any
+    best_perf: float
+    history: List[Tuple[Any, float]]       # per-round incumbent
+    evaluated: List[Any]                   # every scored config, in order
+    evaluated_perf: np.ndarray             # aligned scores
+    rounds: int
+    engine: str = ""
+    evaluator: Any = dataclasses.field(default=None, repr=False)
+
+    def pareto_front(self, hw=None) -> List[ParetoPoint]:
+        """Non-dominated (GOPS up, area down) subset of every evaluated
+        config — the multi-objective mode usable after ANY engine run.
+
+        `hw` defaults to the evaluator's hardware constants."""
+        if not self.evaluated:
+            return []
+        if hw is None and self.evaluator is not None:
+            hw = self.evaluator.hw
+        if hw is None:
+            raise ValueError("pass hw= or run through an Evaluator")
+        perf = np.asarray(self.evaluated_perf, dtype=np.float64)
+        area = np.asarray([c.area(hw) for c in self.evaluated])
+        idx = pareto_front_indices(perf, area)
+        # dedupe identical configs that reached the front via cache repeats
+        seen = set()
+        out: List[ParetoPoint] = []
+        for i in idx:
+            key = tuple(sorted(self.evaluated[i].asdict().items())) \
+                if hasattr(self.evaluated[i], "asdict") else i
+            if key in seen:
+                continue
+            seen.add(key)
+            out.append(ParetoPoint(self.evaluated[i], float(perf[i]),
+                                   float(area[i])))
+        return out
+
+
+# --------------------------------------------------------------------------
+# Optimizer interface + driver
+# --------------------------------------------------------------------------
+
+class Optimizer(abc.ABC):
+    """Ask/tell search engine.
+
+    Contract (see package docstring): the driver alternates
+    `pool = engine.propose()` -> `scores = evaluator(pool)` ->
+    `engine.observe(pool, scores)` until `engine.done`.  Engines own their
+    RNG, their incumbent/`history` bookkeeping, and their stopping rule.
+    """
+
+    name: str = "engine"
+
+    def __init__(self) -> None:
+        self.best: Any = None
+        self.best_perf: float = -np.inf
+        self.history: List[Tuple[Any, float]] = []
+        self.rounds: int = 0
+
+    @abc.abstractmethod
+    def propose(self) -> List[Any]:
+        """Next pool of candidate configurations to score (may be empty)."""
+
+    @abc.abstractmethod
+    def observe(self, pool: Sequence[Any], scores: np.ndarray) -> None:
+        """Feed back the scores for the pool returned by `propose`."""
+
+    @property
+    @abc.abstractmethod
+    def done(self) -> bool:
+        """True once the engine has converged / exhausted its budget."""
+
+    # shared bookkeeping helper
+    def _track_best(self, pool: Sequence[Any], scores: np.ndarray) -> int:
+        i = int(np.argmax(scores))
+        if float(scores[i]) > self.best_perf:
+            self.best, self.best_perf = pool[i], float(scores[i])
+        return i
+
+
+def run_search(engine: Optimizer, evaluator) -> SearchResult:
+    """Drive `engine` to completion through `evaluator`; collect the log."""
+    evaluated: List[Any] = []
+    perf: List[float] = []
+    while not engine.done:
+        pool = engine.propose()
+        if not pool:
+            break
+        scores = evaluator(pool)
+        evaluated.extend(pool)
+        perf.extend(np.asarray(scores, dtype=np.float64).tolist())
+        engine.observe(pool, scores)
+    best = engine.best
+    best_perf = float(engine.best_perf)
+    if best is None and evaluated:          # engine kept no incumbent
+        i = int(np.argmax(perf))
+        best, best_perf = evaluated[i], float(perf[i])
+    return SearchResult(best=best, best_perf=best_perf,
+                        history=list(engine.history), evaluated=evaluated,
+                        evaluated_perf=np.asarray(perf), rounds=engine.rounds,
+                        engine=engine.name, evaluator=evaluator)

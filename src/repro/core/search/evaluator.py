@@ -1,0 +1,193 @@
+"""Shared memoizing evaluators.
+
+`Evaluator` is the accelerator-space scorer: one batched
+`evaluate_stream_many` call (via `performance_gops`) per pool, an LRU cache
+keyed by config hash so repeated points — within a run, across rounds,
+across restarts, across engines sharing the evaluator — are never re-scored.
+It reproduces the pre-refactor `_score_pool` semantics exactly: GOPS of the
+op stream, zeroed where the area budget or the Eq. 9-13 constraints are
+violated.  Areas are cached alongside scores so the multi-objective
+Pareto-front mode costs nothing extra.
+
+`FunctionEvaluator` wraps an arbitrary scalar scoring function (e.g. the
+compile-and-measure `CellEvaluator` of `core/autotune.py`) behind the same
+batched-pool interface and cache, so every engine also drives expensive
+non-analytical spaces.
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.costmodel import (AccelConfig, HardwareConstants, OpStream,
+                                  performance_gops)
+
+__all__ = ["Evaluator", "FunctionEvaluator", "config_key"]
+
+
+def config_key(cfg: Any) -> Tuple:
+    """Stable hashable identity of a config (dataclass field tuple)."""
+    if hasattr(cfg, "asdict"):
+        return tuple(sorted(cfg.asdict().items()))
+    import dataclasses
+    return tuple(sorted(dataclasses.asdict(cfg).items()))
+
+
+class _LRU:
+    """Tiny LRU dict: key -> value, bounded size, hit/miss counters."""
+
+    def __init__(self, maxsize: int):
+        self.maxsize = maxsize
+        self.data: "collections.OrderedDict[Tuple, Any]" = \
+            collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: Tuple) -> Optional[Any]:
+        if key in self.data:
+            self.data.move_to_end(key)
+            self.hits += 1
+            return self.data[key]
+        self.misses += 1
+        return None
+
+    def put(self, key: Tuple, value: Any) -> None:
+        self.data[key] = value
+        self.data.move_to_end(key)
+        while len(self.data) > self.maxsize:
+            self.data.popitem(last=False)
+
+
+class Evaluator:
+    """Batched, memoizing scorer for accelerator configs on one op stream.
+
+    `evaluator(pool)` returns the [len(pool)] GOPS vector with the area
+    budget applied (0.0 on violation) — identical values to scoring the pool
+    uncached, in any batch composition (`evaluate_stream_many` is row-wise
+    independent).
+    """
+
+    def __init__(self, stream: OpStream,
+                 hw: Optional[HardwareConstants] = None,
+                 peak_weight_bits: int = 0,
+                 peak_input_bits: int = 0,
+                 area_budget: float = 0.0,
+                 cache_size: int = 1 << 16):
+        self.stream = stream
+        self.hw = hw or HardwareConstants()
+        self.peak_weight_bits = peak_weight_bits
+        self.peak_input_bits = peak_input_bits
+        self.area_budget = area_budget
+        self._cache = _LRU(cache_size)
+        self.n_batches = 0       # batched model invocations
+        self.n_scored = 0        # configs actually sent to the model
+
+    @classmethod
+    def for_space(cls, stream: OpStream, space,
+                  peak_weight_bits: int = 0, peak_input_bits: int = 0,
+                  cache_size: int = 1 << 16) -> "Evaluator":
+        """Evaluator bound to a DesignSpace's hw constants + area budget."""
+        return cls(stream, hw=space.hw,
+                   peak_weight_bits=peak_weight_bits,
+                   peak_input_bits=peak_input_bits,
+                   area_budget=space.area_budget, cache_size=cache_size)
+
+    # -------------------------------------------------------------- scoring
+    def _score_batch(self, configs: Sequence[AccelConfig]
+                     ) -> List[Tuple[float, float]]:
+        """Uncached path: ONE vectorized model call for the whole batch."""
+        perf = performance_gops(configs, self.stream, self.hw,
+                                self.peak_weight_bits, self.peak_input_bits)
+        areas = np.asarray([c.area(self.hw) for c in configs])
+        if self.area_budget > 0:
+            perf = np.where(areas <= self.area_budget, perf, 0.0)
+        self.n_batches += 1
+        self.n_scored += len(configs)
+        return list(zip(perf.tolist(), areas.tolist()))
+
+    def __call__(self, pool: Sequence[AccelConfig]) -> np.ndarray:
+        return self.score_with_area(pool)[0]
+
+    def score_with_area(self, pool: Sequence[AccelConfig]
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+        """(gops[N], area[N]) for the pool, through the cache."""
+        keys = [config_key(c) for c in pool]
+        cached: Dict[Tuple, Tuple[float, float]] = {}
+        fresh_seen = set()
+        fresh_keys: List[Tuple] = []
+        fresh_cfgs: List[AccelConfig] = []
+        for k, c in zip(keys, pool):
+            if k in cached or k in fresh_seen:
+                continue
+            hit = self._cache.get(k)
+            if hit is not None:
+                cached[k] = hit
+            else:
+                fresh_seen.add(k)
+                fresh_keys.append(k)
+                fresh_cfgs.append(c)
+        if fresh_cfgs:
+            for k, pa in zip(fresh_keys, self._score_batch(fresh_cfgs)):
+                self._cache.put(k, pa)
+                cached[k] = pa
+        perf = np.asarray([cached[k][0] for k in keys])
+        area = np.asarray([cached[k][1] for k in keys])
+        return perf, area
+
+    def score_one(self, cfg: AccelConfig) -> float:
+        return float(self([cfg])[0])
+
+    # ---------------------------------------------------------------- stats
+    @property
+    def cache_hits(self) -> int:
+        return self._cache.hits
+
+    @property
+    def cache_misses(self) -> int:
+        return self._cache.misses
+
+    def stats(self) -> Dict[str, int]:
+        return {"batches": self.n_batches, "scored": self.n_scored,
+                "cache_hits": self._cache.hits,
+                "cache_misses": self._cache.misses,
+                "cache_size": len(self._cache.data)}
+
+
+class FunctionEvaluator:
+    """Pool interface + LRU memoization over a scalar score function.
+
+    Adapts expensive per-config scorers (one XLA compile per point in the
+    TPU execution space) to the engine driver.  `hw`/peaks default to
+    neutral values so generic engine code can read them.
+    """
+
+    def __init__(self, score_fn: Callable[[Any], float],
+                 cache_size: int = 1 << 12):
+        self.score_fn = score_fn
+        self.hw = None
+        self.peak_weight_bits = 0
+        self.peak_input_bits = 0
+        self._cache = _LRU(cache_size)
+        self.n_scored = 0
+
+    def __call__(self, pool: Sequence[Any]) -> np.ndarray:
+        out = []
+        for cfg in pool:
+            k = config_key(cfg)
+            hit = self._cache.get(k)
+            if hit is None:
+                hit = float(self.score_fn(cfg))
+                self.n_scored += 1
+                self._cache.put(k, hit)
+            out.append(hit)
+        return np.asarray(out, dtype=np.float64)
+
+    def score_one(self, cfg: Any) -> float:
+        return float(self([cfg])[0])
+
+    def stats(self) -> Dict[str, int]:
+        return {"scored": self.n_scored, "cache_hits": self._cache.hits,
+                "cache_misses": self._cache.misses}

@@ -1,0 +1,90 @@
+"""Genetic / evolutionary search over power-of-two design domains.
+
+The population lives as a struct-of-arrays index matrix [population, V]
+(`SpaceCodec`), so selection, uniform crossover, and random-reset mutation
+are pure vectorized numpy — configs are only materialized to be scored, one
+batched Evaluator call per generation.
+
+  * tournament selection (size `tournament`) over the scored generation
+  * uniform crossover between parent pairs
+  * per-gene random-reset mutation with prob `p_mut`
+  * elitism: the top `elite` individuals survive unchanged
+
+The initial population is validity-repaired (Eq. 11/13 floors + area
+budget); later generations rely on selection pressure — invalid offspring
+score 0 and die out.
+"""
+
+from __future__ import annotations
+
+from typing import Any, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.search.base import Optimizer, codec_for, repair_with
+
+__all__ = ["GeneticOptimizer"]
+
+
+class GeneticOptimizer(Optimizer):
+    name = "genetic"
+
+    def __init__(self, space, evaluator, *, seed: int = 0,
+                 max_rounds: int = 30, population: int = 48, elite: int = 4,
+                 tournament: int = 3, p_mut: float = 0.15,
+                 p_cross: float = 0.9):
+        super().__init__()
+        self.space = space
+        self.evaluator = evaluator
+        self.max_rounds = max_rounds          # generations
+        self.population = max(population, 4)
+        self.elite = min(elite, self.population // 2)
+        self.tournament = tournament
+        self.p_mut = p_mut
+        self.p_cross = p_cross
+        self.rng = np.random.default_rng(seed)
+        self.codec = codec_for(space)
+        self._pop_idx: Optional[np.ndarray] = None    # [P, V]
+        self._pop_perf: Optional[np.ndarray] = None
+        self._cand_idx: Optional[np.ndarray] = None
+
+    def propose(self) -> List[Any]:
+        if self._pop_idx is None:
+            seeds = [repair_with(self.space, self.evaluator,
+                                 self.space.sample(self.rng))
+                     for _ in range(self.population)]
+            self._cand_idx = self.codec.encode(seeds)
+            return seeds
+        self._cand_idx = self._next_generation()
+        return self.codec.decode(self._cand_idx)
+
+    def _select(self, n: int) -> np.ndarray:
+        """Tournament selection: n row indices into the current population."""
+        entrants = self.rng.integers(self.population,
+                                     size=(n, self.tournament))
+        return entrants[np.arange(n),
+                        np.argmax(self._pop_perf[entrants], axis=1)]
+
+    def _next_generation(self) -> np.ndarray:
+        n_child = self.population - self.elite
+        pa = self._pop_idx[self._select(n_child)]
+        pb = self._pop_idx[self._select(n_child)]
+        cross = (self.rng.random((n_child, 1)) < self.p_cross)
+        gene_mask = self.rng.random(pa.shape) < 0.5
+        children = np.where(cross & gene_mask, pb, pa)
+        children = self.codec.mutate_indices(self.rng, children, self.p_mut)
+        elite_rows = np.argsort(-self._pop_perf)[:self.elite]
+        return np.vstack([self._pop_idx[elite_rows], children])
+
+    def observe(self, pool: Sequence[Any], scores: np.ndarray) -> None:
+        scores = np.asarray(scores, dtype=np.float64)
+        self._track_best(pool, scores)
+        if self._pop_idx is not None:
+            self.rounds += 1
+        self._pop_idx = self._cand_idx
+        self._pop_perf = scores
+        self.history.append((self.best, self.best_perf))
+
+    @property
+    def done(self) -> bool:
+        return self.rounds >= self.max_rounds

@@ -19,8 +19,8 @@ import numpy as np
 
 from repro.core.costmodel import AccelConfig
 from repro.core.graph import ComputationGraph
-from repro.core.greedy import optimize_for_app
 from repro.core.multiapp import AppSpec
+from repro.core.search import EngineSpec, optimize_for_app
 from repro.core.space import DesignSpace
 
 __all__ = ["RadarSummary", "radar_of_top_configs", "sensitivity_study"]
@@ -53,11 +53,12 @@ def _normalize(cfg: AccelConfig, space: DesignSpace) -> Dict[str, float]:
 def radar_of_top_configs(name: str, spec: AppSpec, space: DesignSpace,
                          k: int = 3, restarts: int = 4, seed: int = 0,
                          top_frac: float = 0.10,
-                         max_rounds: int = 40) -> RadarSummary:
+                         max_rounds: int = 40,
+                         engine: EngineSpec = "greedy") -> RadarSummary:
     res = optimize_for_app(spec.stream, space, k=k, restarts=restarts,
                            seed=seed, peak_weight_bits=spec.peak_weight_bits,
                            peak_input_bits=spec.peak_input_bits,
-                           max_rounds=max_rounds)
+                           max_rounds=max_rounds, engine=engine)
     perf = res.evaluated_perf
     valid = perf > 0
     thresh = np.quantile(perf[valid], 1.0 - top_frac) if valid.any() else 0.0
@@ -86,7 +87,8 @@ def radar_of_top_configs(name: str, spec: AppSpec, space: DesignSpace,
 def sensitivity_study(builders: Sequence, names: Sequence[str],
                       space: DesignSpace, k: int = 3, restarts: int = 3,
                       seed: int = 0,
-                      max_rounds: int = 30) -> List[RadarSummary]:
+                      max_rounds: int = 30,
+                      engine: EngineSpec = "greedy") -> List[RadarSummary]:
     """Run the radar summarization over a sequence of graph builders
     (the §5.3 four-step Faster-R-CNN build by default)."""
     out = []
@@ -95,5 +97,6 @@ def sensitivity_study(builders: Sequence, names: Sequence[str],
         spec = AppSpec.from_graph(name, graph)
         out.append(radar_of_top_configs(name, spec, space, k=k,
                                         restarts=restarts,
-                                        seed=seed + i, max_rounds=max_rounds))
+                                        seed=seed + i, max_rounds=max_rounds,
+                                        engine=engine))
     return out

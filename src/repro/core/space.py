@@ -77,6 +77,33 @@ class DesignSpace:
             out.append(dataclasses.replace(cfg, **{variable: int(v)}))
         return out
 
+    # ------------------------------------------------ vectorized conversion
+    def codec(self):
+        """`SpaceCodec` for this space: vectorized config <-> index-array
+        conversion so search engines manipulate populations as
+        struct-of-arrays instead of lists of dataclasses."""
+        from repro.core.search.base import SpaceCodec
+        codec = getattr(self, "_codec", None)
+        if codec is None or codec.domains != {k: tuple(v) for k, v
+                                              in self.domains.items()}:
+            codec = SpaceCodec(self.domains, AccelConfig)
+            self._codec = codec
+        return codec
+
+    def encode(self, configs: Sequence[AccelConfig]) -> np.ndarray:
+        """configs -> [N, V] int64 domain-index array (columns follow
+        `self.variables` order)."""
+        return self.codec().encode(configs)
+
+    def decode(self, idx: np.ndarray) -> List[AccelConfig]:
+        """[N, V] domain-index array -> AccelConfig list (encode inverse)."""
+        return self.codec().decode(idx)
+
+    def sample_indices(self, rng: np.random.Generator,
+                       n: int) -> np.ndarray:
+        """Uniform random [n, V] index population (no validity filtering)."""
+        return self.codec().sample_indices(rng, n)
+
     def within_area(self, cfg: AccelConfig) -> bool:
         return self.area_budget <= 0 or cfg.area(self.hw) <= self.area_budget
 

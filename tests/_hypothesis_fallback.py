@@ -1,0 +1,127 @@
+"""Minimal stand-in for the `hypothesis` API surface used by this suite.
+
+The container image does not ship `hypothesis` (and the repo must not add
+dependencies), so `tests/test_property.py` falls back to this module: a
+seeded random-sampling property runner implementing just `given`,
+`settings`, `assume`, and the handful of strategies the tests draw from
+(`sampled_from`, `integers`, `lists`, `composite`).  Each test function runs
+`max_examples` deterministic examples; `assume(False)` skips the example
+exactly like hypothesis does.  No shrinking — a failing example is reported
+with its drawn arguments instead.
+"""
+
+from __future__ import annotations
+
+import functools
+import zlib
+from typing import Any, Callable, List
+
+import numpy as np
+
+__all__ = ["given", "settings", "assume", "strategies", "HealthCheck"]
+
+_DEFAULT_MAX_EXAMPLES = 50
+
+
+class _UnsatisfiedAssumption(Exception):
+    pass
+
+
+def assume(condition: bool) -> bool:
+    if not condition:
+        raise _UnsatisfiedAssumption()
+    return True
+
+
+class _Strategy:
+    def __init__(self, draw_fn: Callable[[np.random.Generator], Any]):
+        self._draw = draw_fn
+
+    def sample(self, rng: np.random.Generator) -> Any:
+        return self._draw(rng)
+
+
+class strategies:
+    """Namespace mirroring `hypothesis.strategies` (subset)."""
+
+    @staticmethod
+    def sampled_from(seq) -> _Strategy:
+        seq = list(seq)
+        return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        return _Strategy(lambda rng: [
+            elements.sample(rng)
+            for _ in range(int(rng.integers(min_size, max_size + 1)))])
+
+    @staticmethod
+    def composite(fn: Callable) -> Callable[..., _Strategy]:
+        @functools.wraps(fn)
+        def build(*args, **kwargs) -> _Strategy:
+            return _Strategy(
+                lambda rng: fn(lambda s: s.sample(rng), *args, **kwargs))
+        return build
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored):
+    """Decorator recording the example budget (deadline etc. ignored)."""
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+class HealthCheck:
+    """Placeholder so `suppress_health_check=` settings kwargs parse."""
+    all = staticmethod(lambda: [])
+    too_slow = data_too_large = filter_too_much = None
+
+
+def given(**strategy_kwargs):
+    """Run the test over `max_examples` deterministically-seeded draws."""
+    def deco(fn):
+        # NB: no functools.wraps — pytest would introspect the wrapped
+        # signature and demand fixtures for the strategy-drawn arguments.
+        def runner(*args, **kwargs):
+            # read the budget at call time: @settings sits ABOVE @given and
+            # decorates the runner, not fn
+            max_examples = getattr(runner, "_max_examples",
+                                   getattr(fn, "_max_examples",
+                                           _DEFAULT_MAX_EXAMPLES))
+            ran = 0
+            attempts = 0
+            # generous attempt budget so assume()-heavy tests still finish
+            while ran < max_examples and attempts < max_examples * 20:
+                rng = np.random.default_rng(
+                    (zlib.crc32(fn.__name__.encode()), attempts))
+                attempts += 1
+                drawn = {k: s.sample(rng)
+                         for k, s in strategy_kwargs.items()}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except _UnsatisfiedAssumption:
+                    continue
+                except AssertionError as e:
+                    raise AssertionError(
+                        f"falsifying example (attempt {attempts}): "
+                        f"{drawn!r}") from e
+                ran += 1
+            if ran == 0:
+                # mirror hypothesis's Unsatisfied: a property whose assume()
+                # rejects every draw is vacuous, not passing
+                raise AssertionError(
+                    f"{fn.__name__}: assume() rejected all "
+                    f"{attempts} generated examples")
+
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        runner.hypothesis_fallback = True
+        return runner
+    return deco

@@ -1,7 +1,15 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+Falls back to the in-repo sampling runner (`_hypothesis_fallback`) when
+`hypothesis` is not installed, so the properties are always exercised."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import assume, given, settings, strategies as st
+except ModuleNotFoundError:
+    from _hypothesis_fallback import (assume, given, settings,
+                                      strategies as st)
 
 from repro.core.costmodel import (AccelConfig, HardwareConstants, Op,
                                   OpStream, evaluate_stream,
@@ -9,6 +17,7 @@ from repro.core.costmodel import (AccelConfig, HardwareConstants, Op,
 from repro.core.kernel_tune import TileConfig, VMEM_BYTES, tile_cost, \
     tune_matmul_tiles
 from repro.core.roofline import parse_collective_bytes
+from repro.core.space import default_space
 from repro.data import SyntheticLMDataset
 
 pow2 = st.sampled_from([1, 2, 4, 8, 16, 32])
@@ -45,7 +54,6 @@ def accel_cfgs(draw):
 @given(op=conv_ops(), cfg=accel_cfgs())
 def test_compute_cycles_lower_bounded_by_work(op, cfg):
     """For Eq.9-valid configs: cycles x available MACs >= MAC operations."""
-    from hypothesis import assume
     bd = evaluate_stream(cfg, OpStream([op]))
     assume(bool(bd.valid.all()))           # invariant only holds when valid
     total_macs = op.macs * op.batch
@@ -105,6 +113,48 @@ def test_data_shards_reassemble(seed, step, shards):
     again = np.concatenate(
         [ds.shard_batch(step, i, shards)["tokens"] for i in range(shards)], 0)
     np.testing.assert_array_equal(glob, again)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2 ** 16),
+       peak_w_mbit=st.integers(0, 16), peak_a_mbit=st.integers(0, 16))
+def test_repair_meets_peak_floors_within_area_budget(seed, peak_w_mbit,
+                                                     peak_a_mbit):
+    """`repair_for_peaks` on any in-budget sample yields a config meeting
+    the Eq. 11/13 buffer floors while staying inside the area budget
+    (floors drawn well within what the budget can accommodate)."""
+    space = default_space()
+    rng = np.random.default_rng(seed)
+    cfg = space.sample(rng)                      # in-budget by construction
+    pw = peak_w_mbit * (1 << 20)
+    pa = peak_a_mbit * (1 << 20)
+    rep = space.repair_for_peaks(cfg, pw, pa)
+    assert rep.weight_buffer_bits() >= pw
+    assert rep.act_buffer_bits() >= pa
+    assert rep.area(space.hw) <= space.area_budget
+    # repaired values stay inside their domains
+    for var, dom in space.domains.items():
+        assert getattr(rep, var) in dom
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_neighbors_round_trip_config_array_conversion(seed):
+    """`neighbors_over` sweeps survive encode -> decode unchanged (the new
+    vectorized config<->index-array conversion is a bijection on the
+    space)."""
+    space = default_space()
+    rng = np.random.default_rng(seed)
+    cfg = space.sample(rng)
+    var = space.variables[int(rng.integers(len(space.variables)))]
+    neigh = space.neighbors_over(cfg, var)
+    idx = space.encode(neigh)
+    assert idx.shape == (len(neigh), len(space.variables))
+    back = space.decode(idx)
+    assert [c.asdict() for c in back] == [c.asdict() for c in neigh]
+    # index column for the swept variable enumerates the whole domain
+    j = space.variables.index(var)
+    assert idx[:, j].tolist() == list(range(len(space.domains[var])))
 
 
 @settings(max_examples=25, deadline=None)
