@@ -16,6 +16,13 @@ Each pair runs the paper's multi-step greedy (k=1, memoized compiles) over
 the TPU execution space (core/autotune.py), then the scripted
 hypothesis-driven probes below.  Every evaluation is recorded to
 experiments/autotune/<cell>/ and summarized to experiments/perf_hillclimb.json.
+
+`--smoke` instead runs the fixed-budget engine shoot-out on the
+*analytical* accelerator space (no XLA): every engine gets the same
+cost-model evaluation budget on every requested app — the §5.1 CNN graphs
+and the traced model-zoo workloads (`--apps zoo` / `--apps all`, see
+repro.frontend) — and experiments/engine_shootout.json records best-GOPS
+vs. model-call trajectories.
 """
 
 from __future__ import annotations
@@ -141,54 +148,147 @@ def run(max_rounds: int = 4, verbose: bool = True,
     return results
 
 
-def run_smoke(engines: tuple = ("greedy", "anneal"),
-              verbose: bool = True, max_rounds: int = 8) -> dict:
-    """CI smoke: hillclimb the *analytical* accelerator space (no XLA
-    compiles) with each requested engine — seconds, not minutes — and
-    report best GOPS + shared-cache statistics."""
+SMOKE_APPS = ("resnet", "ptb", "wdl")
+SHOOTOUT_ENGINE_KW = {"k": 1, "chains": 8, "population": 24, "batch": 32,
+                      "patience": 8, "max_rounds": 10 ** 6}
+# rounds in a row without a fresh (uncached) model call before an engine is
+# declared converged-by-cycling and cut off
+SHOOTOUT_STALL_ROUNDS = 25
+
+
+def _resolve_apps(app_args) -> tuple:
+    """Expand --apps values: literal names, 'zoo' (all traced model-zoo
+    workloads), or 'all' (seven CNN apps + the zoo)."""
+    from repro.core import apps as app_registry
+
+    out: list = []
+    for a in app_args:
+        if a == "all":
+            out.extend(app_registry.all_app_names())
+        elif a == "zoo":
+            out.extend(app_registry.zoo_app_names())
+        else:
+            out.append(a)
+    # dedupe, preserve order
+    return tuple(dict.fromkeys(out))
+
+
+def run_shootout(app_names: tuple = SMOKE_APPS,
+                 engines: tuple = ("greedy", "anneal", "genetic", "random"),
+                 budget: int = 512, seed: int = 0,
+                 verbose: bool = True,
+                 max_rounds: int = 0,
+                 out_name: str = "engine_shootout.json") -> dict:
+    """Fixed-budget engine shoot-out on the analytical accelerator space.
+
+    Every engine gets the same evaluation budget (`budget` cost-model
+    calls, cache misses only) on every app — hand-built §5.1 CNN graphs
+    and traced model-zoo workloads alike — and reports its best GOPS, the
+    model calls it actually consumed, and the best-GOPS-vs-model-calls
+    trajectory.  The budget gates *round starts* (the ask/tell contract
+    requires scoring a proposed pool in full), so an engine's final round
+    may overshoot by up to one pool; `model_calls` in the JSON is the
+    honest per-engine count — compare trajectories at a common x rather
+    than the terminal best when exact call parity matters.  No XLA
+    compiles: seconds per (app, engine) pair.  Results land in
+    experiments/<out_name>.
+    """
     from repro.core import apps
     from repro.core.multiapp import AppSpec
-    from repro.core.search import optimize_for_app
+    from repro.core.search import Evaluator, make_engine
     from repro.core.space import default_space
 
     space = default_space()
-    spec = AppSpec.from_graph("resnet", apps.build_app("resnet"))
-    out = {}
-    for engine in engines:
-        t0 = time.time()
-        res = optimize_for_app(
-            spec.stream, space, engine=engine, k=2, restarts=2, seed=0,
-            peak_weight_bits=spec.peak_weight_bits,
-            peak_input_bits=spec.peak_input_bits, max_rounds=max_rounds,
-            engine_kwargs={"chains": 8, "population": 24, "batch": 32})
-        stats = res.evaluator.stats()
-        out[engine] = {"best_gops": res.best_perf,
-                       "n_evaluated": len(res.evaluated),
-                       "pareto_points": len(res.pareto_front()),
-                       "seconds": time.time() - t0, **stats}
-        if verbose:
-            print(f"[smoke] {engine:8s} best={res.best_perf:9.2f} GOPS  "
-                  f"evals={len(res.evaluated):5d}  "
-                  f"model_calls={stats['scored']:5d}  "
-                  f"cache_hits={stats['cache_hits']:4d}  "
-                  f"t={out[engine]['seconds']:.2f}s")
-        assert res.best_perf > 0, f"{engine}: no valid config found"
-    return out
+    engine_kw = dict(SHOOTOUT_ENGINE_KW)
+    if max_rounds:                     # optional round bound on top of the
+        engine_kw["max_rounds"] = max_rounds        # evaluation budget
+    results: dict = {"budget": budget, "seed": seed, "engines": list(engines),
+                     "apps": {}}
+    failures: list = []
+    for app in app_names:
+        spec = AppSpec.from_graph(app, apps.build_app(app))
+        per_engine: dict = {}
+        for engine in engines:
+            ev = Evaluator.for_space(spec.stream, space,
+                                     peak_weight_bits=spec.peak_weight_bits,
+                                     peak_input_bits=spec.peak_input_bits)
+            eng = make_engine(engine, space, ev, seed=seed, **engine_kw)
+            t0 = time.time()
+            trajectory = []
+            n_evaluated = 0
+            stall = 0
+            while (not eng.done and ev.n_scored < budget
+                   and stall < SHOOTOUT_STALL_ROUNDS):
+                pool = eng.propose()
+                if not pool:
+                    break
+                before = ev.n_scored
+                eng.observe(pool, ev(pool))
+                stall = stall + 1 if ev.n_scored == before else 0
+                n_evaluated += len(pool)
+                trajectory.append({"model_calls": ev.n_scored,
+                                   "best_gops": float(eng.best_perf)})
+            stats = ev.stats()
+            stats.pop("scored", None)   # == model_calls; one canonical key
+            per_engine[engine] = {
+                "best_gops": float(eng.best_perf),
+                "model_calls": ev.n_scored,
+                "n_evaluated": n_evaluated,
+                "seconds": time.time() - t0,
+                "trajectory": trajectory,
+                **stats,
+            }
+            if verbose:
+                print(f"[shootout] {app:28s} {engine:8s} "
+                      f"best={eng.best_perf:10.2f} GOPS  "
+                      f"model_calls={ev.n_scored:4d}/{budget}  "
+                      f"t={per_engine[engine]['seconds']:.2f}s")
+            if eng.best_perf <= 0:      # record, finish the sweep, fail last
+                failures.append(f"{app}/{engine}")
+        results["apps"][app] = per_engine
+
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / out_name).write_text(json.dumps(results, indent=2))
+    if verbose:
+        print(f"[shootout] wrote {OUT / out_name}")
+    if failures:
+        raise RuntimeError(
+            f"no valid (nonzero-GOPS) config found for: {failures} "
+            f"(full results still written to {OUT / out_name})")
+    return results
+
+
+# Back-compat alias: the old CI smoke entry point is now the shoot-out.
+# The old signature's third positional arg (max_rounds) keeps its meaning.
+def run_smoke(engines: tuple = ("greedy", "anneal"), verbose: bool = True,
+              max_rounds: int = 0, budget: int = 512) -> dict:
+    return run_shootout(SMOKE_APPS, engines, budget=budget, verbose=verbose,
+                        max_rounds=max_rounds)
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--engine", action="append", default=None,
                     help="search engine(s) to run (repeatable); "
-                         "default: greedy")
+                         "default: greedy (full) / all four (smoke)")
     ap.add_argument("--max-rounds", type=int, default=None,
-                    help="search rounds per engine (default: 4 full, "
-                         "8 smoke)")
+                    help="search rounds per engine (both modes; in --smoke "
+                         "it bounds rounds on top of --budget)")
     ap.add_argument("--smoke", action="store_true",
-                    help="fast analytical-space smoke (no XLA compiles)")
+                    help="fixed-budget engine shoot-out on the analytical "
+                         "space (no XLA compiles)")
+    ap.add_argument("--apps", action="append", default=None,
+                    help="apps for the shoot-out (repeatable): any "
+                         "build_app name, 'zoo', or 'all'; default: "
+                         f"{SMOKE_APPS}")
+    ap.add_argument("--budget", type=int, default=512,
+                    help="cost-model evaluation budget per (app, engine)")
     args = ap.parse_args()
-    engines = tuple(args.engine or ["greedy"])
     if args.smoke:
-        run_smoke(engines, max_rounds=args.max_rounds or 8)
+        engines = tuple(args.engine
+                        or ["greedy", "anneal", "genetic", "random"])
+        run_shootout(_resolve_apps(args.apps or list(SMOKE_APPS)), engines,
+                     budget=args.budget, max_rounds=args.max_rounds or 0)
     else:
-        run(max_rounds=args.max_rounds or 4, engines=engines)
+        run(max_rounds=args.max_rounds or 4,
+            engines=tuple(args.engine or ["greedy"]))

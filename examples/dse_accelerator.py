@@ -8,6 +8,12 @@ paper's core workflow end-to-end.  The search strategy is pluggable:
   PYTHONPATH=src python examples/dse_accelerator.py --engine genetic
   PYTHONPATH=src python examples/dse_accelerator.py --engine anneal
   PYTHONPATH=src python examples/dse_accelerator.py --engine random
+
+and so is the application mix: any `build_app` name works, including the
+traced model-zoo workloads of `repro.frontend` —
+
+  PYTHONPATH=src python examples/dse_accelerator.py \
+      --apps resnet --apps qwen2-0.5b:prefill --apps qwen2-0.5b:decode
 """
 
 import argparse
@@ -21,10 +27,13 @@ from repro.core.space import default_space
 ap = argparse.ArgumentParser(description=__doc__)
 ap.add_argument("--engine", choices=sorted(ENGINES), default="greedy",
                 help="search engine for the per-app DSE")
+ap.add_argument("--apps", action="append", default=None,
+                help="applications to co-optimize (repeatable); any "
+                     "build_app name incl. '<arch>:prefill'/'<arch>:decode'")
 args = ap.parse_args()
 
 space = default_space()
-names = ("resnet", "ptb", "wdl")
+names = tuple(args.apps or ("resnet", "ptb", "wdl"))
 specs = [AppSpec.from_graph(n, apps.build_app(n)) for n in names]
 
 res = run_multiapp_study(specs, space, k=2, restarts=2, seed=0,
@@ -37,8 +46,8 @@ print("\nselected config:",
       {k: v for k, v in res.selected.asdict().items()
        if k in ("pe_group", "mac_per_group", "bank_height", "tif", "tof")})
 
-print("\nsensitivity: compute-bound (resnet) vs memory-bound (ptb) optima")
-for n in ("resnet", "ptb"):
+print("\nsensitivity: per-app optima (compute-bound vs memory-bound pull)")
+for n in names[:2]:
     spec = AppSpec.from_graph(n, apps.build_app(n))
     radar = radar_of_top_configs(n, spec, space, k=2, restarts=2,
                                  max_rounds=10, engine=args.engine)

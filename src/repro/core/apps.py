@@ -26,6 +26,7 @@ from repro.core.graph import ComputationGraph
 
 __all__ = [
     "build_app", "APP_BUILDERS", "APP_NAMES",
+    "zoo_app_names", "all_app_names",
     "inception_v3", "deeplab_v3", "resnet_v1_50", "faster_rcnn",
     "ptb_lstm", "wide_and_deep", "nasnet_a",
     "multi_context", "faster_rcnn_step",
@@ -522,5 +523,35 @@ APP_BUILDERS = {
 APP_NAMES = tuple(APP_BUILDERS.keys())
 
 
+def zoo_app_names() -> Tuple[str, ...]:
+    """Traced model-zoo workloads (`<arch>:prefill` / `<arch>:decode`,
+    see `repro.frontend.zoo`); empty when jax is unavailable."""
+    try:
+        from repro.frontend.zoo import ZOO_APP_NAMES
+    except ImportError:
+        return ()
+    return ZOO_APP_NAMES
+
+
+def all_app_names(include_zoo: bool = True) -> Tuple[str, ...]:
+    """The seven paper CNN apps plus (optionally) every zoo workload."""
+    return APP_NAMES + (zoo_app_names() if include_zoo else ())
+
+
 def build_app(name: str) -> ComputationGraph:
-    return APP_BUILDERS[name]()
+    """Resolve any app name: the seven hand-built §5.1 graphs by bare
+    name, traced model-zoo workloads by `<arch>:<variant>`."""
+    builder = APP_BUILDERS.get(name)
+    if builder is not None:
+        return builder()
+    if ":" in name:
+        try:
+            from repro.frontend.zoo import build_zoo_app
+        except ImportError as e:      # jax-less environment: keep the
+            raise KeyError(           # module's KeyError contract
+                f"zoo app {name!r} needs the jax frontend "
+                f"(repro.frontend.zoo unavailable: {e})") from e
+        return build_zoo_app(name)
+    raise KeyError(
+        f"unknown app {name!r}; hand-built apps: {sorted(APP_BUILDERS)}, "
+        f"zoo apps look like 'qwen2-0.5b:prefill' (see repro.frontend.zoo)")

@@ -131,6 +131,29 @@ class Op:
         return Op(OpKind.MATMUL, col1, row1, 1, 1, 1, col2, row1, 1, 1,
                   batch, name)
 
+    @staticmethod
+    def batched_matmul(col1: int, row1: int, col2: int, instances: int = 1,
+                       batch: int = 1, name: str = "") -> "Op":
+        """Table 1 row 5 repeated `instances` times with *distinct* data.
+
+        This is the embedding for batched contractions whose leading
+        dimensions index independent problem instances — attention heads
+        (scores/values are one matmul per head) and MoE experts (one expert
+        GEMM per expert) — via the same `repeat` mechanism the depthwise
+        embedding uses.  `batch` remains the input-batch dimension that the
+        Pb unrolling of Fig. 2(e) exploits.
+        """
+        return Op(OpKind.MATMUL, col1, row1, 1, 1, 1, col2, row1, 1, 1,
+                  batch, name, repeat=instances)
+
+    @staticmethod
+    def batched_matvec(col: int, row: int, instances: int = 1,
+                       batch: int = 1, name: str = "") -> "Op":
+        """Table 1 row 4 repeated `instances` times (e.g. per-head decode
+        attention where the single query row multiplies each head's KV)."""
+        return Op(OpKind.MATVEC, col, row, 1, 1, 1, 1, row, 1, 1, batch,
+                  name, repeat=instances)
+
     # ------------------------------------------------------------ properties
     @property
     def macs(self) -> int:

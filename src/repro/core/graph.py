@@ -164,19 +164,30 @@ class ComputationGraph:
         ops = [self.nodes[n].op for n in names if self.nodes[n].op is not None]
         return OpStream(ops)
 
+    @property
+    def total_weight_bits(self) -> int:
+        """Sum of all parameters attached to the graph (model size)."""
+        return sum(n.weight_bits for n in self.nodes.values())
+
     # ------------------------------------------------------------- summary
-    def summary(self, bit_width: int = 8) -> Dict[str, object]:
-        """Table 3 row for this graph."""
+    def summary(self) -> Dict[str, object]:
+        """Table 3 row for this graph (bytes derive from the bit widths
+        fixed at graph-build time)."""
         prof = self.memory_profile()
         kinds: Dict[str, int] = {}
+        n_data = 0
         for n in self.operation_stream():
             op = self.nodes[n].op
             if op is not None:
                 kinds[op.kind.value] = kinds.get(op.kind.value, 0) + 1
+            else:
+                n_data += 1
         return {
             "peak_input_memory_bytes": prof.peak_activation_bytes,
             "peak_weight_memory_bytes": prof.peak_weight_bytes,
+            "total_weight_bytes": self.total_weight_bits // 8,
             "op_counts": kinds,
             "n_ops": sum(kinds.values()),
+            "n_data_nodes": n_data,
             "total_macs": self.op_stream().total_macs,
         }

@@ -163,12 +163,17 @@ def codec_for(space: Any) -> SpaceCodec:
 
 def repair_with(space: Any, evaluator: Any, cfg: Any) -> Any:
     """Apply the space's validity repair if it has one (Eq. 11/13 buffer
-    floors + area budget for the accelerator space; identity otherwise)."""
+    floors + area budget for the accelerator space; identity otherwise).
+
+    Prefers the evaluator's batch-scaled activation floor
+    (`peak_input_bits_scaled`) because Eq. (13) multiplies the peak demand
+    by the stream's batch size."""
     fn = getattr(space, "repair_for_peaks", None)
     if fn is None:
         return cfg
-    return fn(cfg, getattr(evaluator, "peak_weight_bits", 0),
-              getattr(evaluator, "peak_input_bits", 0))
+    peak_in = getattr(evaluator, "peak_input_bits_scaled",
+                      getattr(evaluator, "peak_input_bits", 0))
+    return fn(cfg, getattr(evaluator, "peak_weight_bits", 0), peak_in)
 
 
 # --------------------------------------------------------------------------

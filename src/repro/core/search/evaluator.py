@@ -80,6 +80,11 @@ class Evaluator:
         self.hw = hw or HardwareConstants()
         self.peak_weight_bits = peak_weight_bits
         self.peak_input_bits = peak_input_bits
+        # Eq. (13) checks abuf >= peak_input_bits * max(batch); validity
+        # repair must target the same batch-scaled floor or batched streams
+        # (e.g. wdl at batch 128) leave repaired configs still invalid.
+        max_batch = int(stream.batch.max()) if len(stream) else 1
+        self.peak_input_bits_scaled = peak_input_bits * max_batch
         self.area_budget = area_budget
         self._cache = _LRU(cache_size)
         self.n_batches = 0       # batched model invocations

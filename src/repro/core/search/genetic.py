@@ -10,9 +10,12 @@ batched Evaluator call per generation.
   * per-gene random-reset mutation with prob `p_mut`
   * elitism: the top `elite` individuals survive unchanged
 
-The initial population is validity-repaired (Eq. 11/13 floors + area
-budget); later generations rely on selection pressure — invalid offspring
-score 0 and die out.
+Crossover and mutation are **constraint-aware**: both the initial
+population and every generation of offspring are routed through the
+space's `repair_for_peaks` (Eq. 11/13 buffer floors + area budget), so
+children spend the evaluation budget inside the feasible region instead of
+scoring 0 GOPS and dying to selection pressure alone.  Pass
+``repair=False`` to recover the selection-pressure-only behaviour.
 """
 
 from __future__ import annotations
@@ -32,7 +35,7 @@ class GeneticOptimizer(Optimizer):
     def __init__(self, space, evaluator, *, seed: int = 0,
                  max_rounds: int = 30, population: int = 48, elite: int = 4,
                  tournament: int = 3, p_mut: float = 0.15,
-                 p_cross: float = 0.9):
+                 p_cross: float = 0.9, repair: bool = True):
         super().__init__()
         self.space = space
         self.evaluator = evaluator
@@ -42,6 +45,7 @@ class GeneticOptimizer(Optimizer):
         self.tournament = tournament
         self.p_mut = p_mut
         self.p_cross = p_cross
+        self.repair = repair
         self.rng = np.random.default_rng(seed)
         self.codec = codec_for(space)
         self._pop_idx: Optional[np.ndarray] = None    # [P, V]
@@ -55,8 +59,8 @@ class GeneticOptimizer(Optimizer):
                      for _ in range(self.population)]
             self._cand_idx = self.codec.encode(seeds)
             return seeds
-        self._cand_idx = self._next_generation()
-        return self.codec.decode(self._cand_idx)
+        self._cand_idx, configs = self._next_generation()
+        return configs
 
     def _select(self, n: int) -> np.ndarray:
         """Tournament selection: n row indices into the current population."""
@@ -65,7 +69,14 @@ class GeneticOptimizer(Optimizer):
         return entrants[np.arange(n),
                         np.argmax(self._pop_perf[entrants], axis=1)]
 
-    def _next_generation(self) -> np.ndarray:
+    def _next_generation(self):
+        """(index array [P, V], decoded configs) for the next generation.
+
+        Constraint-aware offspring: crossover/mutation products are
+        repaired onto the Eq. 11/13 buffer floors and into the area budget
+        (no-op for spaces without `repair_for_peaks`).  Returns the decoded
+        configs alongside the indices so `propose` never decodes twice.
+        """
         n_child = self.population - self.elite
         pa = self._pop_idx[self._select(n_child)]
         pb = self._pop_idx[self._select(n_child)]
@@ -73,8 +84,14 @@ class GeneticOptimizer(Optimizer):
         gene_mask = self.rng.random(pa.shape) < 0.5
         children = np.where(cross & gene_mask, pb, pa)
         children = self.codec.mutate_indices(self.rng, children, self.p_mut)
-        elite_rows = np.argsort(-self._pop_perf)[:self.elite]
-        return np.vstack([self._pop_idx[elite_rows], children])
+        child_cfgs = self.codec.decode(children)
+        if self.repair:
+            child_cfgs = [repair_with(self.space, self.evaluator, cfg)
+                          for cfg in child_cfgs]
+            children = self.codec.encode(child_cfgs)
+        elite_idx = self._pop_idx[np.argsort(-self._pop_perf)[:self.elite]]
+        return (np.vstack([elite_idx, children]),
+                self.codec.decode(elite_idx) + child_cfgs)
 
     def observe(self, pool: Sequence[Any], scores: np.ndarray) -> None:
         scores = np.asarray(scores, dtype=np.float64)

@@ -145,8 +145,8 @@ class DesignSpace:
                     break
             else:
                 break
-        # area repair: shrink compute/tiling only — never pe_group or the
-        # bank variables (that would re-break the buffer floors just grown)
+        # area repair: shrink compute/tiling first — never the bank
+        # variables (that would re-break the buffer floors just grown)
         for var in ("mac_per_group", "tif", "tof"):
             while (self.area_budget > 0
                    and cfg.area(self.hw) > self.area_budget):
@@ -156,6 +156,30 @@ class DesignSpace:
                 if not smaller:
                     break
                 cfg = dataclasses.replace(cfg, **{var: int(smaller[-1])})
+        # still over budget: the SRAM dominates (oversized banks from a
+        # random sample or a crossover/mutation product).  Shrink buffer
+        # variables stepwise, but only accept a step that keeps both
+        # Eq. 11/13 floors satisfied — repaired genetic offspring must
+        # respect the floors AND the area budget simultaneously.
+        shrink_bufs = ("bank_height", "act_banks_pg", "weight_banks_pg",
+                       "bank_width", "pe_group")
+        for _ in range(64):
+            if (self.area_budget <= 0
+                    or cfg.area(self.hw) <= self.area_budget):
+                break
+            for var in shrink_bufs:
+                dom = sorted(self.domains[var])
+                cur = getattr(cfg, var)
+                smaller = [v for v in dom if v < cur]
+                if not smaller:
+                    continue
+                cand = dataclasses.replace(cfg, **{var: int(smaller[-1])})
+                if (cand.weight_buffer_bits() >= peak_weight_bits
+                        and cand.act_buffer_bits() >= peak_input_bits):
+                    cfg = cand
+                    break
+            else:
+                break
         return cfg
 
 

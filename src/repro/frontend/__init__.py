@@ -1,0 +1,41 @@
+"""jaxpr graph-capture frontend (paper §4.1-4.2 for JAX programs).
+
+The paper parses frozen TF graphs into an operation stream that drives the
+analytical model and the DSE.  This package is the reproduction's frontend
+for *arbitrary JAX callables*:
+
+  `trace.trace_to_graph(fn, *args)`  — capture via `jax.make_jaxpr`
+                                       (abstract: ShapeDtypeStruct args),
+                                       walk the jaxpr incl. pjit/scan/remat
+                                       sub-jaxprs, emit a
+                                       `core.graph.ComputationGraph`.
+  `lower.LOWERING_RULES`             — primitive -> Table-1 embedding
+                                       registry (`register_lowering` to
+                                       extend).
+  `zoo`                              — every `repro.configs` architecture
+                                       as `<arch>:prefill` / `<arch>:decode`
+                                       DSE apps, resolved by
+                                       `repro.core.apps.build_app`.
+
+Typical use::
+
+    from repro.core import apps
+    from repro.core.multiapp import AppSpec
+    from repro.core.search import optimize_for_app
+    from repro.core.space import default_space
+
+    graph = apps.build_app("qwen2-0.5b:prefill")       # traced, not hand-built
+    spec = AppSpec.from_graph("qwen2-0.5b:prefill", graph)
+    res = optimize_for_app(spec.stream, default_space(), engine="genetic",
+                           peak_input_bits=spec.peak_input_bits)
+"""
+
+from repro.frontend.lower import (LOWERING_RULES, Lowered, OperandInfo,
+                                  register_lowering)
+from repro.frontend.trace import (DEFAULT_BIT_WIDTH, GraphTracer,
+                                  trace_jaxpr, trace_to_graph)
+
+__all__ = [
+    "LOWERING_RULES", "Lowered", "OperandInfo", "register_lowering",
+    "DEFAULT_BIT_WIDTH", "GraphTracer", "trace_jaxpr", "trace_to_graph",
+]

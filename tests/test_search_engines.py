@@ -149,6 +149,43 @@ def test_history_monotone_for_all_engines(resnet_spec, space):
         assert all(b >= a - 1e-9 for a, b in zip(perfs, perfs[1:])), engine
 
 
+def test_genetic_offspring_respect_constraints(resnet_spec, space):
+    """Constraint-aware crossover/mutation: every offspring generation is
+    routed through `repair_for_peaks`, so children satisfy the Eq. 11/13
+    buffer floors and the area budget instead of scoring 0 GOPS."""
+    ev = Evaluator.for_space(resnet_spec.stream, space,
+                             **_peaks(resnet_spec))
+    eng = GeneticOptimizer(space, ev, seed=0, population=16, max_rounds=4)
+    gen = 0
+    while not eng.done:
+        pool = eng.propose()
+        for cfg in pool:
+            assert cfg.weight_buffer_bits() >= resnet_spec.peak_weight_bits
+            assert cfg.act_buffer_bits() >= ev.peak_input_bits_scaled, \
+                f"gen {gen}: offspring below the Eq. 13 activation floor"
+            assert cfg.area(space.hw) <= space.area_budget, \
+                f"gen {gen}: offspring violates the area budget"
+        eng.observe(pool, ev(pool))
+        gen += 1
+    assert gen > 1                      # crossover/mutation generations ran
+    assert eng.best_perf > 0
+
+
+def test_genetic_repair_can_be_disabled(resnet_spec, space):
+    ev = Evaluator.for_space(resnet_spec.stream, space,
+                             **_peaks(resnet_spec))
+    eng = GeneticOptimizer(space, ev, seed=0, population=16, max_rounds=3,
+                           repair=False)
+    saw_invalid = False
+    while not eng.done:
+        pool = eng.propose()
+        saw_invalid = saw_invalid or any(
+            c.act_buffer_bits() < ev.peak_input_bits_scaled for c in pool)
+        eng.observe(pool, ev(pool))
+    # selection-pressure-only mode drifts out of the feasible region
+    assert saw_invalid
+
+
 # ------------------------------------------------------------------- pareto
 
 def test_pareto_front_nondominated(resnet_spec, space):
