@@ -1,0 +1,304 @@
+"""Evaluator throughput: the array-native pipeline vs the dataclass path.
+
+The paper's premise is that the analytical model sweeps "thousands of
+candidate configurations per second" (§3); this benchmark keeps that
+promise honest.  It scores the same index-array population two ways:
+
+  legacy — the pre-PR dataclass round-trip, reproduced verbatim below:
+           `SpaceCodec.decode` materializes one `AccelConfig` per point,
+           cache keys are per-config `sorted(asdict())` tuples, the cost
+           model rebuilds its [C, 1] columns with per-field getattr loops
+           and runs the pre-PR broadcast kernel (`backend="numpy-ref"`),
+           and areas are one Python `.area()` call per config.
+  array  — the `ConfigBatch` path: `decode_batch` straight from the index
+           arrays (no dataclasses), row-`tobytes()` cache keys, one
+           table-driven/chunked broadcast call, vectorized `area_many`.
+  jax    — the array path with `backend="jax"` (jit broadcast kernel),
+           measured when jax imports; numpy stays the reference.
+
+Both paths produce bit-identical GOPS/area vectors (asserted every run).
+A batched-vs-scalar `repair_for_peaks` comparison rides along since
+population repair sits on the same engine hot loop.
+
+Results go to BENCH_evaluator.json (repo root — the committed file is the
+CI baseline).  `--check <baseline.json>` exits nonzero when the measured
+legacy->array speedup regresses to less than half the baseline's (a
+machine-independent gate: both numbers come from the same host).
+
+Usage:
+  PYTHONPATH=src python benchmarks/evaluator_throughput.py            # full
+  PYTHONPATH=src python benchmarks/evaluator_throughput.py --smoke \
+      --check BENCH_evaluator.json                                    # CI
+  PYTHONPATH=src python benchmarks/evaluator_throughput.py --parity-zoo
+"""
+
+from __future__ import annotations
+
+import argparse
+import collections
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import apps
+from repro.core.costmodel import ConfigBatch, area_many, performance_gops
+from repro.core.multiapp import AppSpec
+from repro.core.search import Evaluator
+from repro.core.space import default_space
+
+ROOT = Path(__file__).resolve().parents[1]
+DEFAULT_OUT = ROOT / "BENCH_evaluator.json"
+
+
+# --------------------------------------------------------------------------
+# The pre-PR dataclass evaluation path, kept verbatim as the baseline under
+# measurement.  (Seed-commit `Evaluator._score_batch` + `config_key`.)
+# --------------------------------------------------------------------------
+
+def _legacy_config_key(cfg) -> tuple:
+    return tuple(sorted(cfg.asdict().items()))
+
+
+class LegacyEvaluator:
+    """Scores a dataclass pool the way the pre-PR Evaluator did."""
+
+    def __init__(self, stream, hw, peak_weight_bits, peak_input_bits,
+                 area_budget):
+        self.stream = stream
+        self.hw = hw
+        self.peak_weight_bits = peak_weight_bits
+        self.peak_input_bits = peak_input_bits
+        self.area_budget = area_budget
+        self.cache: "collections.OrderedDict[tuple, tuple]" = \
+            collections.OrderedDict()
+
+    def __call__(self, pool) -> np.ndarray:
+        keys = [_legacy_config_key(c) for c in pool]
+        cached, fresh_seen, fresh_keys, fresh_cfgs = {}, set(), [], []
+        for k, c in zip(keys, pool):
+            if k in cached or k in fresh_seen:
+                continue
+            hit = self.cache.get(k)
+            if hit is not None:
+                cached[k] = hit
+            else:
+                fresh_seen.add(k)
+                fresh_keys.append(k)
+                fresh_cfgs.append(c)
+        if fresh_cfgs:
+            perf = performance_gops(list(fresh_cfgs), self.stream, self.hw,
+                                    self.peak_weight_bits,
+                                    self.peak_input_bits,
+                                    backend="numpy-ref")
+            areas = np.asarray([c.area(self.hw) for c in fresh_cfgs])
+            if self.area_budget > 0:
+                perf = np.where(areas <= self.area_budget, perf, 0.0)
+            for k, pa in zip(fresh_keys, zip(perf.tolist(), areas.tolist())):
+                self.cache[k] = pa
+                cached[k] = pa
+        return np.asarray([cached[k][0] for k in keys])
+
+
+# --------------------------------------------------------------------------
+# Measurement harness
+# --------------------------------------------------------------------------
+
+def _best_seconds(fn, repeats: int) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run_bench(app: str = "resnet", pool: int = 4096, repeats: int = 5,
+              seed: int = 0, verbose: bool = True) -> dict:
+    spec = AppSpec.from_graph(app, apps.build_app(app))
+    space = default_space()
+    rng = np.random.default_rng(seed)
+    idx = space.sample_indices(rng, pool)
+    pw, pi = spec.peak_weight_bits, spec.peak_input_bits
+
+    def make_ev(backend="numpy"):
+        return Evaluator.for_space(spec.stream, space, peak_weight_bits=pw,
+                                   peak_input_bits=pi, backend=backend)
+
+    # ---- population scoring: index arrays in, GOPS out (cold cache) ----
+    def legacy_pass():
+        ev = LegacyEvaluator(spec.stream, space.hw, pw, pi,
+                             space.area_budget)
+        return ev(space.decode(idx))
+
+    def array_pass(backend="numpy"):
+        ev = make_ev(backend)
+        return ev(space.decode_batch(idx))
+
+    legacy_perf = legacy_pass()
+    array_perf = array_pass()
+    np.testing.assert_array_equal(array_perf, legacy_perf)
+
+    t_legacy = _best_seconds(legacy_pass, repeats)
+    t_array = _best_seconds(array_pass, repeats)
+
+    # warm-cache re-score of the same population (pure key-lookup path)
+    warm_ev = make_ev()
+    warm_batch = space.decode_batch(idx)
+    warm_ev(warm_batch)
+    t_cached = _best_seconds(lambda: warm_ev(warm_batch), repeats)
+
+    # ---- batched vs scalar population repair ----
+    rep_idx = idx[:min(pool, 512)]
+    rep_batch = space.decode_batch(rep_idx)
+    scaled_pi = pi * (int(spec.stream.batch.max()) if len(spec.stream) else 1)
+
+    def scalar_repair():
+        return [space.repair_for_peaks(c, pw, scaled_pi)
+                for c in space.decode(rep_idx)]
+
+    def batched_repair():
+        return space.repair_for_peaks_many(rep_batch, pw, scaled_pi)
+
+    np.testing.assert_array_equal(
+        batched_repair().matrix,
+        ConfigBatch.from_configs(scalar_repair()).matrix)
+    t_rep_scalar = _best_seconds(scalar_repair, max(2, repeats // 2))
+    t_rep_batch = _best_seconds(batched_repair, max(2, repeats // 2))
+
+    results = {
+        "app": app,
+        "pool": pool,
+        "repeats": repeats,
+        "seed": seed,
+        "legacy_cps": pool / t_legacy,
+        "array_cps": pool / t_array,
+        "cached_cps": pool / t_cached,
+        "speedup": t_legacy / t_array,
+        "repair_pool": int(rep_idx.shape[0]),
+        "repair_scalar_cps": rep_idx.shape[0] / t_rep_scalar,
+        "repair_batched_cps": rep_idx.shape[0] / t_rep_batch,
+        "repair_speedup": t_rep_scalar / t_rep_batch,
+    }
+
+    try:
+        jax_perf = array_pass("jax")
+        rel = (np.abs(jax_perf - legacy_perf)
+               / np.maximum(np.abs(legacy_perf), 1e-30))
+        results["jax_max_rel_err"] = float(rel.max())
+        t_jax = _best_seconds(lambda: array_pass("jax"), repeats)
+        results["jax_cps"] = pool / t_jax
+        results["jax_speedup_vs_legacy"] = t_legacy / t_jax
+    except Exception as e:                        # jax missing / no device
+        results["jax_error"] = f"{type(e).__name__}: {e}"
+
+    if verbose:
+        print(f"[evaluator-throughput] app={app} pool={pool}")
+        print(f"  legacy (dataclass) : {results['legacy_cps']:12.0f} "
+              f"configs/s")
+        print(f"  array  (ConfigBatch): {results['array_cps']:12.0f} "
+              f"configs/s   ({results['speedup']:.1f}x)")
+        print(f"  warm cache          : {results['cached_cps']:12.0f} "
+              f"configs/s")
+        if "jax_cps" in results:
+            print(f"  jax backend         : {results['jax_cps']:12.0f} "
+                  f"configs/s   (max rel err "
+                  f"{results['jax_max_rel_err']:.2e})")
+        print(f"  repair scalar       : "
+              f"{results['repair_scalar_cps']:12.0f} configs/s")
+        print(f"  repair batched      : "
+              f"{results['repair_batched_cps']:12.0f} configs/s   "
+              f"({results['repair_speedup']:.1f}x)")
+    return results
+
+
+def run_parity_zoo(pool: int = 256, seed: int = 0) -> float:
+    """numpy-vs-jax GOPS parity over every traced model-zoo app."""
+    space = default_space()
+    rng = np.random.default_rng(seed)
+    worst = 0.0
+    for name in apps.zoo_app_names():
+        spec = AppSpec.from_graph(name, apps.build_app(name))
+        batch = space.decode_batch(space.sample_indices(rng, pool))
+        kw = dict(peak_weight_bits=spec.peak_weight_bits,
+                  peak_input_bits=spec.peak_input_bits)
+        ref = performance_gops(batch, spec.stream, space.hw, **kw)
+        jx = performance_gops(batch, spec.stream, space.hw, backend="jax",
+                              **kw)
+        rel = float((np.abs(jx - ref)
+                     / np.maximum(np.abs(ref), 1e-30)).max())
+        worst = max(worst, rel)
+        status = "OK" if rel <= 1e-6 else "FAIL"
+        print(f"[parity-zoo] {name:32s} max rel err {rel:.2e}  {status}")
+    print(f"[parity-zoo] worst over zoo: {worst:.2e}")
+    if worst > 1e-6:
+        raise SystemExit("jax backend diverges from numpy beyond 1e-6")
+    return worst
+
+
+def check_regression(results: dict, baseline: dict,
+                     factor: float = 2.0) -> None:
+    """Fail (exit 2) when the legacy->array speedup regressed > `factor`x
+    vs the committed baseline.  The speedup ratio is measured on one host
+    within one run, so it transfers across machines where absolute
+    configs/sec do not.  Pool sizes must match for the ratio to be
+    comparable (--smoke keeps the baseline's pool for this reason)."""
+    base_speedup = float(baseline.get("speedup", 0.0))
+    if int(results.get("pool", 0)) != int(baseline.get("pool", 0)):
+        print(f"[check] pool mismatch (baseline "
+              f"{baseline.get('pool')}, got {results.get('pool')}); "
+              "skipping the speedup gate")
+        return
+    got = float(results["speedup"])
+    if base_speedup > 0 and got < base_speedup / factor:
+        print(f"[check] REGRESSION: speedup {got:.1f}x < baseline "
+              f"{base_speedup:.1f}x / {factor:g}")
+        raise SystemExit(2)
+    print(f"[check] ok: speedup {got:.1f}x vs baseline "
+          f"{base_speedup:.1f}x (gate: >= {base_speedup / factor:.1f}x)")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--app", default="resnet",
+                    help="workload to score (any build_app name)")
+    ap.add_argument("--pool", type=int, default=4096,
+                    help="population size per scoring pass")
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: smaller pool, fewer repeats")
+    ap.add_argument("--out", type=Path, default=DEFAULT_OUT,
+                    help=f"JSON output path (default {DEFAULT_OUT})")
+    ap.add_argument("--check", type=Path, default=None,
+                    help="baseline JSON to gate against (>2x speedup "
+                         "regression fails); read before --out overwrites")
+    ap.add_argument("--parity-zoo", action="store_true",
+                    help="check numpy-vs-jax parity on every zoo app "
+                         "instead of benchmarking")
+    args = ap.parse_args()
+
+    if args.parity_zoo:
+        run_parity_zoo()
+        sys.exit(0)
+
+    if args.smoke:
+        # keep the baseline's pool size (the speedup ratio shifts with pool
+        # because fixed overheads amortize differently — the gate must
+        # compare like-for-like); just cap the repeats.  ~5 s total.
+        args.repeats = min(args.repeats, 5)
+
+    # read the committed baseline BEFORE --out (possibly the same file)
+    # overwrites it
+    baseline = (json.loads(args.check.read_text())
+                if args.check and args.check.exists() else None)
+    results = run_bench(app=args.app, pool=args.pool, repeats=args.repeats)
+    results["smoke"] = bool(args.smoke)
+    args.out.write_text(json.dumps(results, indent=2) + "\n")
+    print(f"[evaluator-throughput] wrote {args.out}")
+    if args.check is not None:
+        if baseline is None:
+            print(f"[check] no baseline at {args.check}; skipping gate")
+        else:
+            check_regression(results, baseline)

@@ -178,7 +178,8 @@ def run_shootout(app_names: tuple = SMOKE_APPS,
                  budget: int = 512, seed: int = 0,
                  verbose: bool = True,
                  max_rounds: int = 0,
-                 out_name: str = "engine_shootout.json") -> dict:
+                 out_name: str = "engine_shootout.json",
+                 backend: str = "numpy") -> dict:
     """Fixed-budget engine shoot-out on the analytical accelerator space.
 
     Every engine gets the same evaluation budget (`budget` cost-model
@@ -211,7 +212,8 @@ def run_shootout(app_names: tuple = SMOKE_APPS,
         for engine in engines:
             ev = Evaluator.for_space(spec.stream, space,
                                      peak_weight_bits=spec.peak_weight_bits,
-                                     peak_input_bits=spec.peak_input_bits)
+                                     peak_input_bits=spec.peak_input_bits,
+                                     backend=backend)
             eng = make_engine(engine, space, ev, seed=seed, **engine_kw)
             t0 = time.time()
             trajectory = []
@@ -283,12 +285,16 @@ if __name__ == "__main__":
                          f"{SMOKE_APPS}")
     ap.add_argument("--budget", type=int, default=512,
                     help="cost-model evaluation budget per (app, engine)")
+    ap.add_argument("--backend", default="numpy", choices=("numpy", "jax"),
+                    help="cost-model broadcast-kernel backend for the "
+                         "shoot-out Evaluator")
     args = ap.parse_args()
     if args.smoke:
         engines = tuple(args.engine
                         or ["greedy", "anneal", "genetic", "random"])
         run_shootout(_resolve_apps(args.apps or list(SMOKE_APPS)), engines,
-                     budget=args.budget, max_rounds=args.max_rounds or 0)
+                     budget=args.budget, max_rounds=args.max_rounds or 0,
+                     backend=args.backend)
     else:
         run(max_rounds=args.max_rounds or 4,
             engines=tuple(args.engine or ["greedy"]))

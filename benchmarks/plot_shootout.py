@@ -1,0 +1,88 @@
+"""Plot the engine shoot-out anytime curves (Fig. 7-style).
+
+Reads experiments/engine_shootout.json (written by
+`benchmarks/perf_hillclimb.py --smoke`) and renders one panel per app:
+best-GOPS-so-far vs cost-model calls, one line per engine.  Engine
+regressions show up as a curve dropping below its siblings at the same
+x — CI uploads the PNG next to the JSON so a reviewer can eyeball it.
+
+Usage:
+  PYTHONPATH=src python benchmarks/plot_shootout.py \
+      [--in experiments/engine_shootout.json] \
+      [--out experiments/engine_shootout.png]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from pathlib import Path
+
+OUT = Path(__file__).resolve().parents[1] / "experiments"
+
+ENGINE_STYLE = {
+    "greedy": {"color": "#1f77b4"},
+    "anneal": {"color": "#ff7f0e"},
+    "genetic": {"color": "#2ca02c"},
+    "random": {"color": "#7f7f7f", "linestyle": "--"},
+}
+
+
+def plot(data: dict, out_path: Path) -> Path:
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except ImportError:
+        print("[plot-shootout] matplotlib not installed; skipping plot")
+        sys.exit(0)
+
+    apps = list(data.get("apps", {}))
+    if not apps:
+        raise SystemExit("no apps in the shoot-out JSON; run "
+                         "benchmarks/perf_hillclimb.py --smoke first")
+    ncol = min(3, len(apps))
+    nrow = math.ceil(len(apps) / ncol)
+    fig, axes = plt.subplots(nrow, ncol, figsize=(5.2 * ncol, 3.6 * nrow),
+                             squeeze=False)
+    for i, app in enumerate(apps):
+        ax = axes[i // ncol][i % ncol]
+        for engine, rec in data["apps"][app].items():
+            traj = rec.get("trajectory", [])
+            if not traj:
+                continue
+            xs = [p["model_calls"] for p in traj]
+            ys = [p["best_gops"] for p in traj]
+            style = ENGINE_STYLE.get(engine, {})
+            ax.step(xs, ys, where="post", label=engine, **style)
+        ax.set_title(app)
+        ax.set_xlabel("cost-model calls")
+        ax.set_ylabel("best GOPS")
+        ax.grid(True, alpha=0.3)
+        if i == 0:
+            ax.legend(fontsize=8)
+    for j in range(len(apps), nrow * ncol):
+        axes[j // ncol][j % ncol].axis("off")
+    budget = data.get("budget")
+    fig.suptitle(f"Engine shoot-out anytime curves "
+                 f"(budget={budget} model calls)", y=1.0)
+    fig.tight_layout()
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    fig.savefig(out_path, dpi=120, bbox_inches="tight")
+    print(f"[plot-shootout] wrote {out_path}")
+    return out_path
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--in", dest="inp", type=Path,
+                    default=OUT / "engine_shootout.json")
+    ap.add_argument("--out", type=Path,
+                    default=OUT / "engine_shootout.png")
+    args = ap.parse_args()
+    if not args.inp.exists():
+        raise SystemExit(f"{args.inp} not found; run "
+                         "benchmarks/perf_hillclimb.py --smoke first")
+    plot(json.loads(args.inp.read_text()), args.out)

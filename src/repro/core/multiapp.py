@@ -20,7 +20,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.costmodel import (AccelConfig, HardwareConstants, OpStream,
+from repro.core.costmodel import (AccelConfig, ConfigBatch,
+                                  HardwareConstants, OpStream,
                                   performance_gops)
 from repro.core.graph import ComputationGraph
 from repro.core.search import (EngineSpec, SearchResult, optimize_for_app)
@@ -147,13 +148,15 @@ def run_multiapp_study(
                 break
         candidates[spec.name] = cands
 
-    # 3: cross-evaluate all candidates on all apps
+    # 3: cross-evaluate all candidates on all apps (one array-native batch,
+    # reused across every app row)
     all_cands: List[AccelConfig] = []
     for a in apps:
         all_cands.extend(candidates[a])
+    cand_batch = ConfigBatch.from_configs(all_cands)
     cross = np.zeros((len(specs), len(all_cands)))
     for i, spec in enumerate(specs):
-        cross[i] = performance_gops(all_cands, spec.stream, hw,
+        cross[i] = performance_gops(cand_batch, spec.stream, hw,
                                     spec.peak_weight_bits,
                                     spec.peak_input_bits)
 
@@ -164,9 +167,10 @@ def run_multiapp_study(
 
     # 5: Table 4 / Table 5
     columns = [best_per_app[a] for a in apps] + [selected]
+    col_batch = ConfigBatch.from_configs(columns)
     perf_matrix = np.zeros((len(specs), len(columns)))
     for i, spec in enumerate(specs):
-        perf_matrix[i] = performance_gops(columns, spec.stream, hw,
+        perf_matrix[i] = performance_gops(col_batch, spec.stream, hw,
                                           spec.peak_weight_bits,
                                           spec.peak_input_bits)
     row_best = perf_matrix.max(axis=1, keepdims=True)

@@ -38,11 +38,18 @@ The shared Evaluator
 ====================
 
 `Evaluator` (see `evaluator.py`) scores candidate pools through one batched
-`evaluate_stream_many` call and memoizes by config hash in an LRU cache, so
-repeated points — across rounds, restarts, and even different engines
-sharing one evaluator — are never re-scored.  `FunctionEvaluator` gives the
-same pool interface over an arbitrary scalar scorer (e.g. compile-and-
-measure cells in `core/autotune.py`).
+`evaluate_stream_many` call and memoizes in an LRU cache, so repeated
+points — across rounds, restarts, and even different engines sharing one
+evaluator — are never re-scored.  Pools are **array-native**: engines on
+the accelerator space propose `ConfigBatch` struct-of-arrays populations
+(built straight from `SpaceCodec` index arrays via
+`DesignSpace.decode_batch`, validity-repaired in bulk by
+`repair_for_peaks_many`), cache keys are vectorized row `tobytes()` over
+the canonical field matrix, and areas come from the vectorized
+`area_many` — no dataclass is materialized on the scoring hot path.
+`FunctionEvaluator` gives the same pool interface over an arbitrary scalar
+scorer (e.g. compile-and-measure cells in `core/autotune.py`); pass
+`batch_score_fn` to score each pool's cache-miss set in one call.
 
 Engines
 =======
@@ -82,9 +89,11 @@ from typing import Any, Callable, Dict, List, Optional, Union
 
 import numpy as np
 
+from repro.core.costmodel import ConfigBatch
 from repro.core.search.base import (DiscreteSpace, Optimizer, ParetoPoint,
                                     SearchResult, SpaceCodec,
-                                    pareto_front_indices, run_search)
+                                    pareto_front_indices, repair_many_with,
+                                    repair_with, run_search)
 from repro.core.search.evaluator import (Evaluator, FunctionEvaluator,
                                          config_key)
 from repro.core.search.greedy import GreedyOptimizer
@@ -95,6 +104,7 @@ from repro.core.search.random_search import RandomSearchOptimizer
 __all__ = [
     "Optimizer", "SearchResult", "ParetoPoint", "run_search",
     "SpaceCodec", "DiscreteSpace", "pareto_front_indices",
+    "ConfigBatch", "repair_with", "repair_many_with",
     "Evaluator", "FunctionEvaluator", "config_key",
     "GreedyOptimizer", "AnnealOptimizer", "GeneticOptimizer",
     "RandomSearchOptimizer",

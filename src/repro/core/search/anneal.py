@@ -64,6 +64,9 @@ class AnnealOptimizer(Optimizer):
         cols = self.rng.integers(self.codec.n_vars, size=self.chains)
         idx[rows, cols] = self.rng.integers(self.codec.sizes[cols])
         self._cand_idx = idx
+        # array-native pool on spaces that support it (no dataclasses)
+        if hasattr(self.space, "decode_batch"):
+            return self.space.decode_batch(idx)
         return self.codec.decode(idx)
 
     def observe(self, pool: Sequence[Any], scores: np.ndarray) -> None:

@@ -55,6 +55,20 @@ class SpaceCodec:
             {val: i for i, val in enumerate(self.domains[v])}
             for v in self.variables
         ]
+        # per-variable numeric value LUTs for the array-native paths; None
+        # where a domain is non-numeric (e.g. string-valued ExecPoint vars)
+        self._value_luts: List[Optional[np.ndarray]] = []
+        for v in self.variables:
+            try:
+                self._value_luts.append(
+                    np.asarray(self.domains[v], dtype=np.int64))
+            except (TypeError, ValueError, OverflowError):
+                self._value_luts.append(None)
+
+    @property
+    def all_numeric(self) -> bool:
+        """True when every domain is int-valued (array decode possible)."""
+        return all(lut is not None for lut in self._value_luts)
 
     @property
     def n_vars(self) -> int:
@@ -81,6 +95,41 @@ class SpaceCodec:
                                 for j, var in enumerate(self.variables)})
             for r in range(idx.shape[0])
         ]
+
+    def decode_values(self, idx: np.ndarray) -> Dict[str, np.ndarray]:
+        """[N, V] domain-index array -> {var: [N] int64 value array}.
+
+        The array-native decode: no config objects are materialized.  Only
+        valid for all-numeric spaces (`self.all_numeric`)."""
+        idx = np.asarray(idx, dtype=np.int64)
+        out: Dict[str, np.ndarray] = {}
+        for j, var in enumerate(self.variables):
+            lut = self._value_luts[j]
+            if lut is None:
+                raise TypeError(f"domain of {var!r} is not numeric; "
+                                "array decode unavailable")
+            out[var] = lut[idx[:, j]]
+        return out
+
+    def encode_values(self, values: Dict[str, np.ndarray]) -> np.ndarray:
+        """{var: [N] value array} -> [N, V] domain-index array (inverse of
+        `decode_values`; every value must be a domain member)."""
+        n = len(next(iter(values.values())))
+        out = np.empty((n, self.n_vars), dtype=np.int64)
+        for j, var in enumerate(self.variables):
+            lut = self._value_luts[j]
+            if lut is None:
+                raise TypeError(f"domain of {var!r} is not numeric; "
+                                "array encode unavailable")
+            order = np.argsort(lut, kind="stable")
+            pos = np.searchsorted(lut[order], values[var])
+            idx = order[np.clip(pos, 0, len(lut) - 1)]
+            if not np.array_equal(lut[idx], values[var]):
+                bad = values[var][lut[idx] != values[var]]
+                raise ValueError(f"values {bad[:4]}... of {var!r} are not "
+                                 "in its domain")
+            out[:, j] = idx
+        return out
 
     def sample_indices(self, rng: np.random.Generator, n: int) -> np.ndarray:
         """Uniform random [n, V] index population."""
@@ -176,6 +225,19 @@ def repair_with(space: Any, evaluator: Any, cfg: Any) -> Any:
     return fn(cfg, getattr(evaluator, "peak_weight_bits", 0), peak_in)
 
 
+def repair_many_with(space: Any, evaluator: Any, batch: Any) -> Any:
+    """Batched `repair_with`: route a whole population (ConfigBatch or
+    config sequence) through `space.repair_for_peaks_many` with the
+    evaluator's peak floors.  Returns None when the space has no batched
+    repair (caller falls back to the scalar path)."""
+    fn = getattr(space, "repair_for_peaks_many", None)
+    if fn is None:
+        return None
+    peak_in = getattr(evaluator, "peak_input_bits_scaled",
+                      getattr(evaluator, "peak_input_bits", 0))
+    return fn(batch, getattr(evaluator, "peak_weight_bits", 0), peak_in)
+
+
 # --------------------------------------------------------------------------
 # Results
 # --------------------------------------------------------------------------
@@ -236,7 +298,11 @@ class SearchResult:
         if hw is None:
             raise ValueError("pass hw= or run through an Evaluator")
         perf = np.asarray(self.evaluated_perf, dtype=np.float64)
-        area = np.asarray([c.area(hw) for c in self.evaluated])
+        try:
+            from repro.core.costmodel import area_many
+            area = area_many(self.evaluated, hw)
+        except (ImportError, AttributeError, TypeError):
+            area = np.asarray([c.area(hw) for c in self.evaluated])
         idx = pareto_front_indices(perf, area)
         # dedupe identical configs that reached the front via cache repeats
         seen = set()
@@ -295,17 +361,26 @@ class Optimizer(abc.ABC):
 
 
 def run_search(engine: Optimizer, evaluator) -> SearchResult:
-    """Drive `engine` to completion through `evaluator`; collect the log."""
-    evaluated: List[Any] = []
+    """Drive `engine` to completion through `evaluator`; collect the log.
+
+    Engines may propose either config-object lists or array-native
+    `ConfigBatch` pools; batches stay arrays through scoring and are only
+    materialized to dataclasses once, after the loop, for the
+    `SearchResult.evaluated` log."""
+    pools: List[Any] = []
     perf: List[float] = []
     while not engine.done:
         pool = engine.propose()
-        if not pool:
+        if pool is None or len(pool) == 0:
             break
         scores = evaluator(pool)
-        evaluated.extend(pool)
+        pools.append(pool)
         perf.extend(np.asarray(scores, dtype=np.float64).tolist())
         engine.observe(pool, scores)
+    evaluated: List[Any] = []
+    for pool in pools:
+        evaluated.extend(pool.to_configs() if hasattr(pool, "to_configs")
+                         else pool)
     best = engine.best
     best_perf = float(engine.best_perf)
     if best is None and evaluated:          # engine kept no incumbent

@@ -2,17 +2,27 @@
 
 `Evaluator` is the accelerator-space scorer: one batched
 `evaluate_stream_many` call (via `performance_gops`) per pool, an LRU cache
-keyed by config hash so repeated points — within a run, across rounds,
-across restarts, across engines sharing the evaluator — are never re-scored.
-It reproduces the pre-refactor `_score_pool` semantics exactly: GOPS of the
-op stream, zeroed where the area budget or the Eq. 9-13 constraints are
-violated.  Areas are cached alongside scores so the multi-objective
-Pareto-front mode costs nothing extra.
+keyed by the raw canonical field bytes of each config so repeated points —
+within a run, across rounds, across restarts, across engines sharing the
+evaluator — are never re-scored.  It reproduces the pre-refactor
+`_score_pool` semantics exactly: GOPS of the op stream, zeroed where the
+area budget or the Eq. 9-13 constraints are violated.  Areas are cached
+alongside scores so the multi-objective Pareto-front mode costs nothing
+extra.
+
+The evaluation path is array-native: pools may be `ConfigBatch`
+struct-of-arrays populations (what the engines propose) or plain
+`AccelConfig` sequences; either way the cache key is a vectorized row
+`tobytes()` over the canonical field matrix (no per-config dict sorting),
+the area comes from the vectorized `area_many`, and the cost model sees one
+`[C, O]` broadcast call per miss set.  `backend="jax"` routes that call
+through the jit-compiled kernel.
 
 `FunctionEvaluator` wraps an arbitrary scalar scoring function (e.g. the
 compile-and-measure `CellEvaluator` of `core/autotune.py`) behind the same
 batched-pool interface and cache, so every engine also drives expensive
-non-analytical spaces.
+non-analytical spaces.  Pass `batch_score_fn` when the underlying scorer
+can take a whole pool at once — cache misses are then scored in one call.
 """
 
 from __future__ import annotations
@@ -22,7 +32,8 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.costmodel import (AccelConfig, HardwareConstants, OpStream,
+from repro.core.costmodel import (AccelConfig, ConfigBatch,
+                                  HardwareConstants, OpStream, area_many,
                                   performance_gops)
 
 __all__ = ["Evaluator", "FunctionEvaluator", "config_key"]
@@ -57,6 +68,9 @@ class _LRU:
     def put(self, key: Tuple, value: Any) -> None:
         self.data[key] = value
         self.data.move_to_end(key)
+        self.trim()
+
+    def trim(self) -> None:
         while len(self.data) > self.maxsize:
             self.data.popitem(last=False)
 
@@ -75,7 +89,8 @@ class Evaluator:
                  peak_weight_bits: int = 0,
                  peak_input_bits: int = 0,
                  area_budget: float = 0.0,
-                 cache_size: int = 1 << 16):
+                 cache_size: int = 1 << 16,
+                 backend: str = "numpy"):
         self.stream = stream
         self.hw = hw or HardwareConstants()
         self.peak_weight_bits = peak_weight_bits
@@ -86,6 +101,7 @@ class Evaluator:
         max_batch = int(stream.batch.max()) if len(stream) else 1
         self.peak_input_bits_scaled = peak_input_bits * max_batch
         self.area_budget = area_budget
+        self.backend = backend
         self._cache = _LRU(cache_size)
         self.n_batches = 0       # batched model invocations
         self.n_scored = 0        # configs actually sent to the model
@@ -93,53 +109,76 @@ class Evaluator:
     @classmethod
     def for_space(cls, stream: OpStream, space,
                   peak_weight_bits: int = 0, peak_input_bits: int = 0,
-                  cache_size: int = 1 << 16) -> "Evaluator":
+                  cache_size: int = 1 << 16,
+                  backend: str = "numpy") -> "Evaluator":
         """Evaluator bound to a DesignSpace's hw constants + area budget."""
         return cls(stream, hw=space.hw,
                    peak_weight_bits=peak_weight_bits,
                    peak_input_bits=peak_input_bits,
-                   area_budget=space.area_budget, cache_size=cache_size)
+                   area_budget=space.area_budget, cache_size=cache_size,
+                   backend=backend)
 
     # -------------------------------------------------------------- scoring
-    def _score_batch(self, configs: Sequence[AccelConfig]
-                     ) -> List[Tuple[float, float]]:
+    def _score_batch(self, configs) -> Tuple[np.ndarray, np.ndarray]:
         """Uncached path: ONE vectorized model call for the whole batch."""
-        perf = performance_gops(configs, self.stream, self.hw,
-                                self.peak_weight_bits, self.peak_input_bits)
-        areas = np.asarray([c.area(self.hw) for c in configs])
+        batch = ConfigBatch.from_configs(configs)
+        perf = performance_gops(batch, self.stream, self.hw,
+                                self.peak_weight_bits, self.peak_input_bits,
+                                backend=self.backend)
+        areas = area_many(batch, self.hw)
         if self.area_budget > 0:
             perf = np.where(areas <= self.area_budget, perf, 0.0)
         self.n_batches += 1
-        self.n_scored += len(configs)
-        return list(zip(perf.tolist(), areas.tolist()))
+        self.n_scored += len(batch)
+        return perf, areas
 
-    def __call__(self, pool: Sequence[AccelConfig]) -> np.ndarray:
+    def __call__(self, pool) -> np.ndarray:
         return self.score_with_area(pool)[0]
 
-    def score_with_area(self, pool: Sequence[AccelConfig]
-                        ) -> Tuple[np.ndarray, np.ndarray]:
-        """(gops[N], area[N]) for the pool, through the cache."""
-        keys = [config_key(c) for c in pool]
-        cached: Dict[Tuple, Tuple[float, float]] = {}
-        fresh_seen = set()
-        fresh_keys: List[Tuple] = []
-        fresh_cfgs: List[AccelConfig] = []
-        for k, c in zip(keys, pool):
-            if k in cached or k in fresh_seen:
+    def score_with_area(self, pool) -> Tuple[np.ndarray, np.ndarray]:
+        """(gops[N], area[N]) for the pool — a `ConfigBatch` or an
+        `AccelConfig` sequence — through the cache.
+
+        One pass over the vectorized row keys resolves hits straight into
+        the output arrays; the miss set is gathered by row index, scored in
+        one batched model call, scattered back, and bulk-inserted into the
+        LRU (single trim)."""
+        batch = ConfigBatch.from_configs(pool)
+        keys = batch.row_keys()
+        n = len(keys)
+        perf = np.empty(n, dtype=np.float64)
+        area = np.empty(n, dtype=np.float64)
+        cache, data = self._cache, self._cache.data
+        first_row: Dict[bytes, int] = {}
+        dup_rows: List[Tuple[int, int]] = []
+        fresh_keys: List[bytes] = []
+        fresh_rows: List[int] = []
+        for i, k in enumerate(keys):
+            j = first_row.get(k)
+            if j is not None:               # in-pool duplicate: copy later
+                dup_rows.append((i, j))
                 continue
-            hit = self._cache.get(k)
+            first_row[k] = i
+            hit = data.get(k)
             if hit is not None:
-                cached[k] = hit
+                data.move_to_end(k)
+                cache.hits += 1
+                perf[i], area[i] = hit
             else:
-                fresh_seen.add(k)
+                cache.misses += 1
                 fresh_keys.append(k)
-                fresh_cfgs.append(c)
-        if fresh_cfgs:
-            for k, pa in zip(fresh_keys, self._score_batch(fresh_cfgs)):
-                self._cache.put(k, pa)
-                cached[k] = pa
-        perf = np.asarray([cached[k][0] for k in keys])
-        area = np.asarray([cached[k][1] for k in keys])
+                fresh_rows.append(i)
+        if fresh_rows:
+            rows = np.asarray(fresh_rows, dtype=np.int64)
+            fp, fa = self._score_batch(batch.take(rows))
+            perf[rows] = fp
+            area[rows] = fa
+            for k, pa in zip(fresh_keys, zip(fp.tolist(), fa.tolist())):
+                data[k] = pa
+            cache.trim()
+        for i, j in dup_rows:
+            perf[i] = perf[j]
+            area[i] = area[j]
         return perf, area
 
     def score_one(self, cfg: AccelConfig) -> float:
@@ -167,28 +206,59 @@ class FunctionEvaluator:
     Adapts expensive per-config scorers (one XLA compile per point in the
     TPU execution space) to the engine driver.  `hw`/peaks default to
     neutral values so generic engine code can read them.
+
+    When the underlying scorer can handle a whole pool at once (a batched
+    simulator, a vmapped model, a parallel compile farm), pass
+    `batch_score_fn(configs) -> sequence of floats`: the cache-missing
+    subset of each pool is then scored in ONE call instead of one call per
+    config.  `score_fn` remains the scalar fallback/reference.
     """
 
     def __init__(self, score_fn: Callable[[Any], float],
-                 cache_size: int = 1 << 12):
+                 cache_size: int = 1 << 12,
+                 batch_score_fn: Optional[
+                     Callable[[Sequence[Any]], Sequence[float]]] = None):
         self.score_fn = score_fn
+        self.batch_score_fn = batch_score_fn
         self.hw = None
         self.peak_weight_bits = 0
         self.peak_input_bits = 0
         self._cache = _LRU(cache_size)
         self.n_scored = 0
+        self.n_batches = 0
 
     def __call__(self, pool: Sequence[Any]) -> np.ndarray:
-        out = []
-        for cfg in pool:
-            k = config_key(cfg)
+        pool = list(pool)
+        keys = [config_key(cfg) for cfg in pool]
+        vals: Dict[Tuple, float] = {}
+        miss_seen = set()
+        miss_keys: List[Tuple] = []
+        miss_cfgs: List[Any] = []
+        for k, cfg in zip(keys, pool):
+            if k in vals or k in miss_seen:
+                continue
             hit = self._cache.get(k)
-            if hit is None:
-                hit = float(self.score_fn(cfg))
-                self.n_scored += 1
-                self._cache.put(k, hit)
-            out.append(hit)
-        return np.asarray(out, dtype=np.float64)
+            if hit is not None:
+                vals[k] = hit
+            else:
+                miss_seen.add(k)
+                miss_keys.append(k)
+                miss_cfgs.append(cfg)
+        if miss_cfgs:
+            if self.batch_score_fn is not None:
+                scores = [float(s) for s in self.batch_score_fn(miss_cfgs)]
+                if len(scores) != len(miss_cfgs):
+                    raise ValueError(
+                        f"batch_score_fn returned {len(scores)} scores for "
+                        f"{len(miss_cfgs)} configs")
+                self.n_batches += 1
+            else:
+                scores = [float(self.score_fn(cfg)) for cfg in miss_cfgs]
+            self.n_scored += len(miss_cfgs)
+            for k, s in zip(miss_keys, scores):
+                self._cache.put(k, s)
+                vals[k] = s
+        return np.asarray([vals[k] for k in keys], dtype=np.float64)
 
     def score_one(self, cfg: Any) -> float:
         return float(self([cfg])[0])

@@ -2,8 +2,9 @@
 
 The population lives as a struct-of-arrays index matrix [population, V]
 (`SpaceCodec`), so selection, uniform crossover, and random-reset mutation
-are pure vectorized numpy — configs are only materialized to be scored, one
-batched Evaluator call per generation.
+are pure vectorized numpy — and on array-capable spaces the generation is
+scored as a `ConfigBatch` (one batched Evaluator call, no dataclasses
+materialized).
 
   * tournament selection (size `tournament`) over the scored generation
   * uniform crossover between parent pairs
@@ -24,7 +25,8 @@ from typing import Any, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.search.base import Optimizer, codec_for, repair_with
+from repro.core.search.base import (Optimizer, codec_for, repair_many_with,
+                                    repair_with)
 
 __all__ = ["GeneticOptimizer"]
 
@@ -70,12 +72,14 @@ class GeneticOptimizer(Optimizer):
                         np.argmax(self._pop_perf[entrants], axis=1)]
 
     def _next_generation(self):
-        """(index array [P, V], decoded configs) for the next generation.
+        """(index array [P, V], pool) for the next generation.
 
         Constraint-aware offspring: crossover/mutation products are
         repaired onto the Eq. 11/13 buffer floors and into the area budget
-        (no-op for spaces without `repair_for_peaks`).  Returns the decoded
-        configs alongside the indices so `propose` never decodes twice.
+        (no-op for spaces without `repair_for_peaks`).  On array-capable
+        spaces the whole generation — repair included — stays index/array
+        native (`repair_for_peaks_many` on a `ConfigBatch`); the scalar
+        per-offspring loop is the fallback and the reference.
         """
         n_child = self.population - self.elite
         pa = self._pop_idx[self._select(n_child)]
@@ -84,14 +88,24 @@ class GeneticOptimizer(Optimizer):
         gene_mask = self.rng.random(pa.shape) < 0.5
         children = np.where(cross & gene_mask, pb, pa)
         children = self.codec.mutate_indices(self.rng, children, self.p_mut)
-        child_cfgs = self.codec.decode(children)
         if self.repair:
-            child_cfgs = [repair_with(self.space, self.evaluator, cfg)
-                          for cfg in child_cfgs]
-            children = self.codec.encode(child_cfgs)
+            children = self._repair_indices(children)
         elite_idx = self._pop_idx[np.argsort(-self._pop_perf)[:self.elite]]
-        return (np.vstack([elite_idx, children]),
-                self.codec.decode(elite_idx) + child_cfgs)
+        pop_idx = np.vstack([elite_idx, children])
+        if hasattr(self.space, "decode_batch"):
+            return pop_idx, self.space.decode_batch(pop_idx)
+        return pop_idx, self.codec.decode(pop_idx)
+
+    def _repair_indices(self, idx: np.ndarray) -> np.ndarray:
+        """Route an index population through the space's validity repair."""
+        if hasattr(self.space, "decode_batch"):
+            repaired = repair_many_with(self.space, self.evaluator,
+                                        self.space.decode_batch(idx))
+            if repaired is not None:
+                return self.space.encode_batch(repaired)
+        cfgs = [repair_with(self.space, self.evaluator, cfg)
+                for cfg in self.codec.decode(idx)]
+        return self.codec.encode(cfgs)
 
     def observe(self, pool: Sequence[Any], scores: np.ndarray) -> None:
         scores = np.asarray(scores, dtype=np.float64)

@@ -29,7 +29,7 @@ from typing import Any, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.search.base import Optimizer, repair_with
+from repro.core.search.base import Optimizer, codec_for, repair_with
 
 __all__ = ["GreedyOptimizer"]
 
@@ -60,6 +60,7 @@ class GreedyOptimizer(Optimizer):
         self.patience = patience
         self.rng = np.random.default_rng(seed)
         self.init = init
+        self.codec = codec_for(space)
         self._s0: Optional[Any] = None
         self._p0: float = 0.0
         self._stale = 0
@@ -86,9 +87,40 @@ class GreedyOptimizer(Optimizer):
             self._s0 = s0
             return [s0]
 
-        pool: List[Any] = [self._s0]
         variables = list(self.rng.choice(self.space.variables, size=self.k,
                                          replace=False))
+        try:
+            s0_idx = self.codec.encode([self._s0])
+        except (KeyError, TypeError):
+            # s0 has out-of-domain fields (e.g. a user init on a restricted
+            # space): fall back to the object path, which sweeps around it
+            # with dataclasses.replace and leaves the other fields alone
+            s0_idx = None
+
+        if s0_idx is not None:
+            # Array-native pool construction: same Algorithm-1 pool (same
+            # candidate order, same RNG stream, same pool-cap subsample) as
+            # the object path below, built by index-matrix ops.  Each
+            # variable sweep appends an s-major x domain-order block —
+            # exactly lines 5-9's `for s in pool: for v in domain` order.
+            pool_idx = s0_idx
+            for var in variables:                   # lines 5-9
+                j = self.codec.variables.index(var)
+                d = int(self.codec.sizes[j])
+                block = np.repeat(pool_idx, d, axis=0)
+                block[:, j] = np.tile(np.arange(d, dtype=np.int64),
+                                      pool_idx.shape[0])
+                pool_idx = np.vstack([pool_idx, block])
+                if pool_idx.shape[0] > self.pool_cap:   # memory guard
+                    sub = self.rng.choice(pool_idx.shape[0] - 1,
+                                          size=self.pool_cap - 1,
+                                          replace=False) + 1
+                    pool_idx = np.vstack([pool_idx[:1], pool_idx[sub]])
+            if hasattr(self.space, "decode_batch"):
+                return self.space.decode_batch(pool_idx)
+            return self.codec.decode(pool_idx)
+
+        pool: List[Any] = [self._s0]
         for var in variables:                       # lines 5-9
             new_pool = list(pool)
             for s in pool:

@@ -5,6 +5,12 @@ Each round draws one uniform batch over the domains (struct-of-arrays via
 their starting points (otherwise virtually every draw lands in the 0-GOPS
 constraint desert and the baseline is vacuous), and scores it in one
 batched Evaluator call.
+
+On spaces with an array decode (`decode_batch`, i.e. the accelerator
+`DesignSpace`) the whole round stays array-native: indices -> `ConfigBatch`
+-> batched `repair_for_peaks_many` -> Evaluator, with no dataclass
+materialized; the repaired population is bit-identical to the per-config
+scalar path.
 """
 
 from __future__ import annotations
@@ -13,7 +19,8 @@ from typing import Any, List, Sequence
 
 import numpy as np
 
-from repro.core.search.base import Optimizer, codec_for, repair_with
+from repro.core.search.base import (Optimizer, codec_for, repair_many_with,
+                                    repair_with)
 
 __all__ = ["RandomSearchOptimizer"]
 
@@ -32,8 +39,15 @@ class RandomSearchOptimizer(Optimizer):
         self.codec = codec_for(space)
 
     def propose(self) -> List[Any]:
-        draws = self.codec.decode(
-            self.codec.sample_indices(self.rng, self.batch))
+        idx = self.codec.sample_indices(self.rng, self.batch)
+        if hasattr(self.space, "decode_batch"):
+            batch = self.space.decode_batch(idx)
+            repaired = repair_many_with(self.space, self.evaluator, batch)
+            if repaired is not None:
+                return repaired
+            # space decodes to arrays but has no batched repair: fall back
+            # to the scalar repair below rather than skipping repair
+        draws = self.codec.decode(idx)
         return [repair_with(self.space, self.evaluator, c) for c in draws]
 
     def observe(self, pool: Sequence[Any], scores: np.ndarray) -> None:

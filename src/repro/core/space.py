@@ -17,7 +17,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.costmodel import AccelConfig, HardwareConstants, LoopOrder
+from repro.core.costmodel import (AccelConfig, ConfigBatch,
+                                  HardwareConstants, LoopOrder, area_many)
 
 __all__ = ["DesignSpace", "default_space", "DEFAULT_AREA_BUDGET"]
 
@@ -98,6 +99,18 @@ class DesignSpace:
     def decode(self, idx: np.ndarray) -> List[AccelConfig]:
         """[N, V] domain-index array -> AccelConfig list (encode inverse)."""
         return self.codec().decode(idx)
+
+    def decode_batch(self, idx: np.ndarray) -> ConfigBatch:
+        """[N, V] domain-index array -> array-native `ConfigBatch`, without
+        materializing any dataclass (the engines' scoring fast path)."""
+        return ConfigBatch.from_columns(**self.codec().decode_values(idx))
+
+    def encode_batch(self, batch: ConfigBatch) -> np.ndarray:
+        """`ConfigBatch` -> [N, V] domain-index array (decode_batch
+        inverse; every field value must be a domain member)."""
+        codec = self.codec()
+        return codec.encode_values(
+            {v: batch.col(v) for v in codec.variables})
 
     def sample_indices(self, rng: np.random.Generator,
                        n: int) -> np.ndarray:
@@ -181,6 +194,104 @@ class DesignSpace:
             else:
                 break
         return cfg
+
+    # ------------------------------------------------- batched validity repair
+    _GROW_W = ("bank_height", "weight_banks_pg", "bank_width", "pe_group")
+    _GROW_A = ("bank_height", "act_banks_pg", "bank_width", "pe_group")
+    _SHRINK_AREA = ("mac_per_group", "tif", "tof")
+    _SHRINK_BUFS = ("bank_height", "act_banks_pg", "weight_banks_pg",
+                    "bank_width", "pe_group")
+
+    def _sorted_domain(self, var: str) -> np.ndarray:
+        cache = getattr(self, "_sorted_domains", None)
+        if cache is None:
+            cache = self._sorted_domains = {}
+        dom = cache.get(var)
+        if dom is None or len(dom) != len(self.domains[var]):
+            dom = cache[var] = np.asarray(sorted(self.domains[var]),
+                                          dtype=np.int64)
+        return dom
+
+    def repair_for_peaks_many(self, configs, peak_weight_bits: int,
+                              peak_input_bits: int) -> ConfigBatch:
+        """Vectorized `repair_for_peaks` over a whole population.
+
+        Row `i` of the result equals
+        ``repair_for_peaks(configs[i], peak_weight_bits, peak_input_bits)``
+        exactly: each phase iterates the same bounded repair schedule, but
+        one numpy mask operation per step repairs every still-unsatisfied
+        row at once instead of a Python loop per offspring.  Accepts a
+        `ConfigBatch` or any `AccelConfig` sequence; returns a new
+        `ConfigBatch` (inputs are never mutated)."""
+        batch = ConfigBatch.from_configs(configs)
+        m = batch.matrix.copy()
+        n = m.shape[0]
+        j_of = ConfigBatch._INDEX
+
+        def wbuf(mm: np.ndarray) -> np.ndarray:
+            return (mm[:, j_of["weight_banks_pg"]] * mm[:, j_of["pe_group"]]
+                    * mm[:, j_of["bank_height"]] * mm[:, j_of["bank_width"]])
+
+        def abuf(mm: np.ndarray) -> np.ndarray:
+            return (mm[:, j_of["act_banks_pg"]] * mm[:, j_of["pe_group"]]
+                    * mm[:, j_of["bank_height"]] * mm[:, j_of["bank_width"]])
+
+        def area(mm: np.ndarray) -> np.ndarray:
+            return area_many(ConfigBatch(mm), self.hw)
+
+        # phases A/B: grow the first growable buffer variable (in order)
+        # for every row still under its peak floor
+        for grow_vars, buf, floor in ((self._GROW_W, wbuf, peak_weight_bits),
+                                      (self._GROW_A, abuf, peak_input_bits)):
+            for _ in range(64):
+                need = buf(m) < floor
+                if not need.any():
+                    break
+                bumped = np.zeros(n, dtype=bool)
+                for var in grow_vars:
+                    j, dom = j_of[var], self._sorted_domain(var)
+                    pos = np.searchsorted(dom, m[:, j], side="right")
+                    sel = need & ~bumped & (pos < len(dom))
+                    if sel.any():
+                        m[sel, j] = dom[pos[sel]]
+                        bumped |= sel
+                if not bumped.any():      # nothing growable -> scalar `break`
+                    break
+
+        # phase C: shrink compute/tiling variables while over the area budget
+        if self.area_budget > 0:
+            for var in self._SHRINK_AREA:
+                j, dom = j_of[var], self._sorted_domain(var)
+                for _ in range(len(dom)):
+                    pos = np.searchsorted(dom, m[:, j], side="left")
+                    sel = (area(m) > self.area_budget) & (pos > 0)
+                    if not sel.any():
+                        break
+                    m[sel, j] = dom[pos[sel] - 1]
+
+            # phase D: shrink buffer variables stepwise, accepting only steps
+            # that keep both Eq. 11/13 floors satisfied
+            for _ in range(64):
+                over = area(m) > self.area_budget
+                if not over.any():
+                    break
+                changed = np.zeros(n, dtype=bool)
+                for var in self._SHRINK_BUFS:
+                    j, dom = j_of[var], self._sorted_domain(var)
+                    pos = np.searchsorted(dom, m[:, j], side="left")
+                    sel = over & ~changed & (pos > 0)
+                    if not sel.any():
+                        continue
+                    cand = m[sel].copy()
+                    cand[:, j] = dom[pos[sel] - 1]
+                    ok = ((wbuf(cand) >= peak_weight_bits)
+                          & (abuf(cand) >= peak_input_bits))
+                    rows = np.flatnonzero(sel)[ok]
+                    m[rows, j] = dom[pos[rows] - 1]
+                    changed[rows] = True
+                if not changed.any():     # every over row stuck -> break
+                    break
+        return ConfigBatch(m)
 
 
 # A representative area budget: room for ~16K MACs plus ~tens of Mbit of
