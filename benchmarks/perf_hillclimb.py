@@ -179,7 +179,8 @@ def run_shootout(app_names: tuple = SMOKE_APPS,
                  verbose: bool = True,
                  max_rounds: int = 0,
                  out_name: str = "engine_shootout.json",
-                 backend: str = "numpy") -> dict:
+                 backend: str = "numpy",
+                 weight_peak_mode: str = "streaming") -> dict:
     """Fixed-budget engine shoot-out on the analytical accelerator space.
 
     Every engine gets the same evaluation budget (`budget` cost-model
@@ -194,7 +195,6 @@ def run_shootout(app_names: tuple = SMOKE_APPS,
     compiles: seconds per (app, engine) pair.  Results land in
     experiments/<out_name>.
     """
-    from repro.core import apps
     from repro.core.multiapp import AppSpec
     from repro.core.search import Evaluator, make_engine
     from repro.core.space import default_space
@@ -204,10 +204,10 @@ def run_shootout(app_names: tuple = SMOKE_APPS,
     if max_rounds:                     # optional round bound on top of the
         engine_kw["max_rounds"] = max_rounds        # evaluation budget
     results: dict = {"budget": budget, "seed": seed, "engines": list(engines),
-                     "apps": {}}
+                     "weight_peak_mode": weight_peak_mode, "apps": {}}
     failures: list = []
     for app in app_names:
-        spec = AppSpec.from_graph(app, apps.build_app(app))
+        spec = AppSpec.from_app(app, weight_peak_mode=weight_peak_mode)
         per_engine: dict = {}
         for engine in engines:
             ev = Evaluator.for_space(spec.stream, space,
@@ -288,13 +288,18 @@ if __name__ == "__main__":
     ap.add_argument("--backend", default="numpy", choices=("numpy", "jax"),
                     help="cost-model broadcast-kernel backend for the "
                          "shoot-out Evaluator")
+    ap.add_argument("--weight-peak-mode", default="streaming",
+                    choices=("strict", "streaming"),
+                    help="Eq. 10/11 weight-peak reading for every app, "
+                         "hand-built AND traced zoo graphs")
     args = ap.parse_args()
     if args.smoke:
         engines = tuple(args.engine
                         or ["greedy", "anneal", "genetic", "random"])
         run_shootout(_resolve_apps(args.apps or list(SMOKE_APPS)), engines,
                      budget=args.budget, max_rounds=args.max_rounds or 0,
-                     backend=args.backend)
+                     backend=args.backend,
+                     weight_peak_mode=args.weight_peak_mode)
     else:
         run(max_rounds=args.max_rounds or 4,
             engines=tuple(args.engine or ["greedy"]))

@@ -1,4 +1,5 @@
-"""Plot the engine shoot-out anytime curves (Fig. 7-style).
+"""Plot the engine shoot-out anytime curves (Fig. 7-style) and
+`repro.dse` Pareto studies.
 
 Reads experiments/engine_shootout.json (written by
 `benchmarks/perf_hillclimb.py --smoke`) and renders one panel per app:
@@ -6,10 +7,17 @@ best-GOPS-so-far vs cost-model calls, one line per engine.  Engine
 regressions show up as a curve dropping below its siblings at the same
 x — CI uploads the PNG next to the JSON so a reviewer can eyeball it.
 
+With `--study <StudyResult.json>` (written by ``python -m repro.dse
+--objective pareto`` / `StudyResult.save`) it instead renders the joint
+perf/area Pareto front: every front point, the per-area-budget
+selections, and the budget lines of the Tables 4-5-style sweep.
+
 Usage:
   PYTHONPATH=src python benchmarks/plot_shootout.py \
       [--in experiments/engine_shootout.json] \
       [--out experiments/engine_shootout.png]
+  PYTHONPATH=src python benchmarks/plot_shootout.py \
+      --study experiments/dse_study.json [--out experiments/front.png]
 """
 
 from __future__ import annotations
@@ -75,14 +83,75 @@ def plot(data: dict, out_path: Path) -> Path:
     return out_path
 
 
+def plot_study_front(rec: dict, out_path: Path) -> Path:
+    """Render a `StudyResult` JSON's joint perf/area Pareto front."""
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except ImportError:
+        print("[plot-shootout] matplotlib not installed; skipping plot")
+        sys.exit(0)
+
+    front = rec.get("front") or []
+    if not front:
+        raise SystemExit("no Pareto front in the StudyResult JSON; run "
+                         "python -m repro.dse --objective pareto first")
+    meta = rec.get("meta", {})
+    pts = sorted(front, key=lambda p: p["area"])
+    areas = [p["area"] for p in pts]
+    scores = [p["score"] for p in pts]
+
+    fig, ax = plt.subplots(figsize=(6.4, 4.2))
+    ax.step(areas, scores, where="post", color="#1f77b4", alpha=0.6,
+            zorder=1)
+    ax.scatter(areas, scores, color="#1f77b4", s=28, zorder=2,
+               label="joint Pareto front")
+    sels = rec.get("budget_selections") or {}
+    sel_labeled = False
+    for b, sel in sorted(sels.items(), key=lambda kv: float(kv[0])):
+        ax.axvline(float(b), color="#7f7f7f", linestyle="--", alpha=0.5)
+        ax.annotate(f"area≤{float(b):g}", (float(b), ax.get_ylim()[0]),
+                    rotation=90, fontsize=7, va="bottom", ha="right",
+                    alpha=0.7)
+        if sel is not None:
+            ax.scatter([sel["area"]], [sel["score"]], marker="*", s=160,
+                       color="#d62728", zorder=3,
+                       label=None if sel_labeled else "budget selection")
+            sel_labeled = True
+    apps = meta.get("apps", [])
+    ylabel = ("geomean GOPS across apps" if len(apps) > 1 else "GOPS")
+    ax.set_xlabel("area (cost-model units)")
+    ax.set_ylabel(ylabel)
+    ax.set_title(f"perf/area Pareto sweep — {', '.join(apps)} "
+                 f"({meta.get('engine', '?')})")
+    ax.grid(True, alpha=0.3)
+    ax.legend(fontsize=8)
+    fig.tight_layout()
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    fig.savefig(out_path, dpi=120, bbox_inches="tight")
+    print(f"[plot-shootout] wrote {out_path}")
+    return out_path
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--in", dest="inp", type=Path,
                     default=OUT / "engine_shootout.json")
-    ap.add_argument("--out", type=Path,
-                    default=OUT / "engine_shootout.png")
+    ap.add_argument("--study", type=Path, default=None,
+                    help="render a StudyResult JSON's Pareto front instead "
+                         "of the shoot-out curves")
+    ap.add_argument("--out", type=Path, default=None)
     args = ap.parse_args()
-    if not args.inp.exists():
-        raise SystemExit(f"{args.inp} not found; run "
-                         "benchmarks/perf_hillclimb.py --smoke first")
-    plot(json.loads(args.inp.read_text()), args.out)
+    if args.study is not None:
+        if not args.study.exists():
+            raise SystemExit(f"{args.study} not found; run "
+                             "python -m repro.dse --objective pareto first")
+        plot_study_front(json.loads(args.study.read_text()),
+                         args.out or args.study.with_suffix(".png"))
+    else:
+        if not args.inp.exists():
+            raise SystemExit(f"{args.inp} not found; run "
+                             "benchmarks/perf_hillclimb.py --smoke first")
+        plot(json.loads(args.inp.read_text()),
+             args.out or OUT / "engine_shootout.png")

@@ -2,7 +2,9 @@
 
 Optimizes an accelerator for three DNNs, picks the geometric-mean winner,
 and shows the sensitivity of the optimum to the application mix — the
-paper's core workflow end-to-end.  The search strategy is pluggable:
+paper's core workflow end-to-end, expressed through the declarative
+`repro.dse.Study` facade (this example is now a ~20-line composition; the
+full flag surface lives behind ``python -m repro.dse``):
 
   PYTHONPATH=src python examples/dse_accelerator.py                   # greedy
   PYTHONPATH=src python examples/dse_accelerator.py --engine genetic
@@ -18,11 +20,10 @@ traced model-zoo workloads of `repro.frontend` —
 
 import argparse
 
-from repro.core import apps
-from repro.core.multiapp import AppSpec, run_multiapp_study
 from repro.core.search import ENGINES
 from repro.core.sensitivity import radar_of_top_configs
 from repro.core.space import default_space
+from repro.dse import GeomeanAcrossApps, SearchBudget, Study
 
 ap = argparse.ArgumentParser(description=__doc__)
 ap.add_argument("--engine", choices=sorted(ENGINES), default="greedy",
@@ -34,10 +35,12 @@ args = ap.parse_args()
 
 space = default_space()
 names = tuple(args.apps or ("resnet", "ptb", "wdl"))
-specs = [AppSpec.from_graph(n, apps.build_app(n)) for n in names]
 
-res = run_multiapp_study(specs, space, k=2, restarts=2, seed=0,
-                         max_rounds=12, engine=args.engine)
+study = Study(apps=names, space=space, objective=GeomeanAcrossApps(),
+              engine=args.engine,
+              budget=SearchBudget(k=2, restarts=2, max_rounds=12),
+              seed=0, name="dse_accelerator")
+res = study.run().multiapp
 print(res.table4())
 print()
 print("geomean improvements vs per-app bests (Table 5):")
@@ -47,11 +50,10 @@ print("\nselected config:",
        if k in ("pe_group", "mac_per_group", "bank_height", "tif", "tof")})
 
 print("\nsensitivity: per-app optima (compute-bound vs memory-bound pull)")
-for n in names[:2]:
-    spec = AppSpec.from_graph(n, apps.build_app(n))
-    radar = radar_of_top_configs(n, spec, space, k=2, restarts=2,
+for spec in study.specs[:2]:
+    radar = radar_of_top_configs(spec.name, spec, space, k=2, restarts=2,
                                  max_rounds=10, engine=args.engine)
     vals = radar.values
-    print(f"  {n:8s} macs={vals['mac_per_group']:.2f} "
+    print(f"  {spec.name:8s} macs={vals['mac_per_group']:.2f} "
           f"pe={vals['pe_group']:.2f} tif={vals['tif']:.2f} "
           f"tof={vals['tof']:.2f} (normalized top-10% means)")

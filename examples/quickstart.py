@@ -9,7 +9,7 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
 from repro.core import apps
-from repro.core.greedy import multi_step_greedy
+from repro.core.search import multi_step_greedy
 from repro.core.kernel_tune import tune_matmul_tiles
 from repro.core.multiapp import AppSpec
 from repro.core.space import default_space

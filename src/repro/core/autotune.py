@@ -38,7 +38,7 @@ import numpy as np
 
 from repro.core.roofline import HW, RooflineReport
 from repro.core.search import (DiscreteSpace, EngineSpec, FunctionEvaluator,
-                               filter_kwargs, make_engine, run_search)
+                               filter_kwargs)
 
 __all__ = ["ExecPoint", "EXEC_DOMAINS", "CellEvaluator", "exec_space",
            "greedy_autotune", "autotune_search", "select_geomean_config"]
@@ -161,15 +161,23 @@ def autotune_search(evaluator: CellEvaluator, *, engine: EngineSpec = "greedy",
                                max_rounds=max_rounds, init=init, log=log,
                                **filter_kwargs(greedy_autotune,
                                                engine_kwargs))
+    from repro.dse import SearchBudget, Study
+
     space = exec_space(shape_mode, has_moe)
     fev = FunctionEvaluator(evaluator.score)
     kw: Dict[str, Any] = {"chains": 2, "population": 6, "batch": 4,
-                          "elite": 1, "max_rounds": max_rounds, "seed": seed}
+                          "elite": 1}
     kw.update(engine_kwargs)
     if init is not None:
         kw.setdefault("init", init)
-    eng = make_engine(engine, space, fev, **kw)
-    res = run_search(eng, fev)
+    # evaluator-driven (generic) Study: one engine run over the execution
+    # space through the declarative front door — same make_engine kwarg
+    # filtering, same seed, same ask/tell loop as before
+    study = Study(space=space, evaluator=fev, engine=engine,
+                  budget=SearchBudget(restarts=1, max_rounds=max_rounds,
+                                      engine_kwargs=kw),
+                  seed=seed, name="autotune")
+    res = study.run().per_app_results["space"]
     best, best_perf = res.best, res.best_perf
     if init is not None:
         # engines without an `init` parameter (genetic, random) drop it in

@@ -1,71 +1,40 @@
-"""Multi-step greedy optimizer (paper §4.3, Algorithm 1) — compat shim.
+"""DEPRECATED compat shim for the pre-subsystem greedy optimizer.
 
-The implementation moved into the pluggable search subsystem
-(`repro.core.search`): the Algorithm-1 engine lives in
-`search/greedy.py`, scoring lives in the shared memoizing
-`search.Evaluator`, and the multi-restart driver is
-`search.optimize_for_app` (which also accepts `engine="anneal" |
-"genetic" | "random"`).
+The multi-step greedy (paper §4.3, Algorithm 1) lives in the pluggable
+search subsystem: `repro.core.search.multi_step_greedy` (single start),
+`repro.core.search.optimize_for_app` (multi-restart, engine-pluggable),
+and the declarative front door `repro.dse.Study`.  This module re-exports
+the same call surface — `multi_step_greedy`, `optimize_for_app`,
+`GreedyResult` — with identical (bit-for-bit) results, and emits a
+`DeprecationWarning` on import so remaining callers migrate:
 
-This module keeps the original call surface — `multi_step_greedy`,
-`optimize_for_app`, `GreedyResult` — and reproduces the pre-refactor
-results bit-for-bit on a fixed seed (same RNG call sequence, same pool
-construction, same scores).
+    from repro.core.search import multi_step_greedy, optimize_for_app
 """
 
 from __future__ import annotations
 
-from typing import Optional
+import warnings
 
-from repro.core.costmodel import AccelConfig, OpStream
-from repro.core.search import (Evaluator, GreedyOptimizer, SearchResult,
-                               run_search)
+from repro.core.search import SearchResult, multi_step_greedy
 from repro.core.search import optimize_for_app as _optimize_for_app
-from repro.core.space import DesignSpace
 
 __all__ = ["GreedyResult", "multi_step_greedy", "optimize_for_app"]
+
+warnings.warn(
+    "repro.core.greedy is deprecated: import multi_step_greedy / "
+    "optimize_for_app from repro.core.search (or use repro.dse.Study); "
+    "this shim will be removed in a future release",
+    DeprecationWarning, stacklevel=2)
 
 # Backwards-compat alias: the old GreedyResult fields (best, best_perf,
 # history, evaluated, evaluated_perf, rounds) are all on SearchResult.
 GreedyResult = SearchResult
 
 
-def multi_step_greedy(
-    stream: OpStream,
-    space: DesignSpace,
-    k: int = 3,
-    delta_p_threshold: float = 1e-3,
-    max_rounds: int = 40,
-    seed: int = 0,
-    init: Optional[AccelConfig] = None,
-    peak_weight_bits: int = 0,
-    peak_input_bits: int = 0,
-    pool_cap: int = 20000,
-    patience: int = 1,
-) -> GreedyResult:
-    """Algorithm 1.  `k` trades off optimality and per-round cost.
-
-    Thin wrapper over `search.GreedyOptimizer` + `search.Evaluator`."""
-    evaluator = Evaluator.for_space(stream, space,
-                                    peak_weight_bits=peak_weight_bits,
-                                    peak_input_bits=peak_input_bits)
-    engine = GreedyOptimizer(space, evaluator, k=k,
-                             delta_p_threshold=delta_p_threshold,
-                             max_rounds=max_rounds, seed=seed, init=init,
-                             pool_cap=pool_cap, patience=patience)
-    return run_search(engine, evaluator)
-
-
-def optimize_for_app(
-    stream: OpStream,
-    space: DesignSpace,
-    k: int = 3,
-    restarts: int = 4,
-    seed: int = 0,
-    peak_weight_bits: int = 0,
-    peak_input_bits: int = 0,
-    max_rounds: int = 40,
-) -> GreedyResult:
+def optimize_for_app(stream, space, k: int = 3, restarts: int = 4,
+                     seed: int = 0, peak_weight_bits: int = 0,
+                     peak_input_bits: int = 0,
+                     max_rounds: int = 40) -> GreedyResult:
     """Multi-start greedy (see `search.optimize_for_app` for the engine-
     generic version)."""
     return _optimize_for_app(stream, space, k=k, restarts=restarts,

@@ -20,11 +20,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.costmodel import (AccelConfig, ConfigBatch,
-                                  HardwareConstants, OpStream,
-                                  performance_gops)
+from repro.core.costmodel import AccelConfig, OpStream
 from repro.core.graph import ComputationGraph
-from repro.core.search import (EngineSpec, SearchResult, optimize_for_app)
+from repro.core.search import EngineSpec, SearchResult
 from repro.core.space import DesignSpace
 
 __all__ = ["AppSpec", "MultiAppResult", "run_multiapp_study"]
@@ -50,11 +48,26 @@ class AppSpec:
         other app whenever one app has a giant FC layer (fasterRCNN's fc6),
         which degenerates the paper's Table 4 cross-evaluation; see
         EXPERIMENTS.md §Paper-validation for the deviation note."""
+        if weight_peak_mode not in ("strict", "streaming"):
+            raise ValueError(f"weight_peak_mode must be 'strict' or "
+                             f"'streaming', got {weight_peak_mode!r}")
         prof = graph.memory_profile()
         pw = prof.peak_weight_bits if weight_peak_mode == "strict" else 0
         return AppSpec(name=name, stream=graph.op_stream(),
                        peak_weight_bits=pw,
                        peak_input_bits=prof.peak_activation_bits)
+
+    @staticmethod
+    def from_app(name: str,
+                 weight_peak_mode: str = "streaming") -> "AppSpec":
+        """Resolve any `build_app` name — the seven hand-built §5.1 graphs
+        AND the traced model-zoo workloads (``"<arch>:prefill"`` /
+        ``"<arch>:decode"``) — under either Eq. 10/11 weight-peak reading,
+        so zoo apps can be costed strict or streaming exactly like the
+        hand-built ones."""
+        from repro.core.apps import build_app
+        return AppSpec.from_graph(name, build_app(name),
+                                  weight_peak_mode=weight_peak_mode)
 
 
 @dataclasses.dataclass
@@ -89,11 +102,6 @@ class MultiAppResult:
         return "\t".join(hdr) + "\n" + "\t".join(vals)
 
 
-def _geomean(x: np.ndarray, axis: int = 0) -> np.ndarray:
-    x = np.maximum(x, 1e-12)
-    return np.exp(np.log(x).mean(axis=axis))
-
-
 def run_multiapp_study(
     specs: Sequence[AppSpec],
     space: DesignSpace,
@@ -106,95 +114,27 @@ def run_multiapp_study(
     engine: EngineSpec = "greedy",
     engine_kwargs: Optional[Dict] = None,
 ) -> MultiAppResult:
-    """`engine` selects the per-app DSE strategy by name or factory
+    """Thin composition over the declarative `repro.dse.Study` facade:
+    per-app DSE (steps 1-2), cross-evaluation (step 3), and the
+    `GeomeanAcrossApps` selection + Table 4/5 synthesis (steps 4-5) all
+    live in `Study._synthesize_geomean` now; this wrapper keeps the
+    historical signature and byte-identical selections
+    (tests/test_dse_study.py pins a pre-refactor golden).
+
+    `engine` selects the per-app DSE strategy by name or factory
     ("greedy" | "anneal" | "genetic" | "random", see `repro.core.search`);
     the default reproduces the paper's multi-step greedy pipeline."""
-    hw = space.hw
-    apps = [s.name for s in specs]
+    from repro.dse import GeomeanAcrossApps, SearchBudget, Study
 
-    # 1-2: per-app DSE + top-10 % candidate selection
-    greedy_results: Dict[str, SearchResult] = {}
-    candidates: Dict[str, List[AccelConfig]] = {}
-    best_per_app: Dict[str, AccelConfig] = {}
-    best_perf_per_app: Dict[str, float] = {}
-    for i, spec in enumerate(specs):
-        res = optimize_for_app(spec.stream, space, k=k, restarts=restarts,
-                               seed=seed + 7919 * i,
-                               peak_weight_bits=spec.peak_weight_bits,
-                               peak_input_bits=spec.peak_input_bits,
-                               max_rounds=max_rounds, engine=engine,
-                               engine_kwargs=engine_kwargs)
-        greedy_results[spec.name] = res
-        best_per_app[spec.name] = res.best
-        best_perf_per_app[spec.name] = res.best_perf
-        perf = res.evaluated_perf
-        valid = perf > 0
-        if valid.any():
-            thresh = np.quantile(perf[valid], 1.0 - top_frac)
-            idx = np.flatnonzero(perf >= thresh)
-        else:
-            idx = np.asarray([int(np.argmax(perf))])
-        # dedupe while preserving score order
-        order = idx[np.argsort(-perf[idx])]
-        seen = set()
-        cands: List[AccelConfig] = []
-        for j in order:
-            cfg = res.evaluated[int(j)]
-            key = tuple(sorted(cfg.asdict().items()))
-            if key not in seen:
-                seen.add(key)
-                cands.append(cfg)
-            if len(cands) >= max_candidates_per_app:
-                break
-        candidates[spec.name] = cands
-
-    # 3: cross-evaluate all candidates on all apps (one array-native batch,
-    # reused across every app row)
-    all_cands: List[AccelConfig] = []
-    for a in apps:
-        all_cands.extend(candidates[a])
-    cand_batch = ConfigBatch.from_configs(all_cands)
-    cross = np.zeros((len(specs), len(all_cands)))
-    for i, spec in enumerate(specs):
-        cross[i] = performance_gops(cand_batch, spec.stream, hw,
-                                    spec.peak_weight_bits,
-                                    spec.peak_input_bits)
-
-    # 4: geomean selection over candidates valid on *every* app
-    valid_cols = (cross > 0).all(axis=0)
-    geo = np.where(valid_cols, _geomean(cross, axis=0), 0.0)
-    selected = all_cands[int(np.argmax(geo))]
-
-    # 5: Table 4 / Table 5
-    columns = [best_per_app[a] for a in apps] + [selected]
-    col_batch = ConfigBatch.from_configs(columns)
-    perf_matrix = np.zeros((len(specs), len(columns)))
-    for i, spec in enumerate(specs):
-        perf_matrix[i] = performance_gops(col_batch, spec.stream, hw,
-                                          spec.peak_weight_bits,
-                                          spec.peak_input_bits)
-    row_best = perf_matrix.max(axis=1, keepdims=True)
-    normalized = perf_matrix / np.maximum(row_best, 1e-12)
-    geomeans = _geomean(normalized, axis=0)
-    improvements = geomeans[-1] / np.maximum(geomeans[:-1], 1e-12) - 1.0
-
-    # Table 5b: compare against the per-app best *among everywhere-valid*
-    # candidates — the apples-to-apples number for the paper's 12.4-92%
-    # band (a per-app best that violates another app's constraints has a
-    # ~0 geomean and makes the raw ratio meaningless).
-    improvements_valid = np.zeros(len(specs))
-    if valid_cols.any():
-        cross_valid = np.where(valid_cols[None, :], cross, 0.0)
-        geo_valid = np.where(valid_cols, _geomean(cross_valid, axis=0), 0.0)
-        sel_geo = float(geo_valid.max())
-        for i in range(len(specs)):
-            j = int(np.argmax(cross_valid[i]))
-            improvements_valid[i] = sel_geo / max(geo_valid[j], 1e-12) - 1.0
-
-    return MultiAppResult(
-        apps=apps, best_per_app=best_per_app,
-        best_perf_per_app=best_perf_per_app, selected=selected,
-        perf_matrix=perf_matrix, normalized_matrix=normalized,
-        geomeans=geomeans, improvements=improvements,
-        improvements_valid=improvements_valid,
-        candidates_per_app=candidates, greedy_results=greedy_results)
+    study = Study(apps=list(specs), space=space,
+                  objective=GeomeanAcrossApps(), engine=engine,
+                  budget=SearchBudget(k=k, restarts=restarts,
+                                      max_rounds=max_rounds,
+                                      engine_kwargs=dict(engine_kwargs
+                                                         or {})),
+                  seed=seed, top_frac=top_frac,
+                  max_candidates_per_app=max_candidates_per_app,
+                  name="multiapp")
+    result = study.run()
+    assert result.multiapp is not None
+    return result.multiapp

@@ -109,7 +109,7 @@ __all__ = [
     "GreedyOptimizer", "AnnealOptimizer", "GeneticOptimizer",
     "RandomSearchOptimizer",
     "ENGINES", "EngineSpec", "filter_kwargs", "make_engine",
-    "optimize_for_app",
+    "optimize_for_app", "multi_step_greedy",
 ]
 
 ENGINES: Dict[str, type] = {
@@ -147,7 +147,15 @@ def make_engine(engine: EngineSpec, space, evaluator, **kwargs) -> Optimizer:
         factory = ENGINES[engine]
     else:
         factory = engine
-    return factory(space, evaluator, **filter_kwargs(factory, kwargs))
+    eng = factory(space, evaluator, **filter_kwargs(factory, kwargs))
+    # vector-objective evaluators (repro.dse ParetoObjective) expose a
+    # scalarize hook; install it so engines reduce [N, M] rows themselves
+    # when driven outside run_search (e.g. the shoot-out loop)
+    if getattr(eng, "scalarizer", None) is None:
+        obj = getattr(evaluator, "objective", None)
+        if obj is not None and hasattr(obj, "scalarize"):
+            eng.scalarizer = evaluator.scalarize
+    return eng
 
 
 def optimize_for_app(
@@ -182,6 +190,7 @@ def optimize_for_app(
     best: Optional[SearchResult] = None
     all_cfg: List[Any] = []
     all_perf: List[float] = []
+    all_values: List[Any] = []
     total_rounds = 0
     for r in range(restarts):
         eng = make_engine(engine, space, evaluator,
@@ -189,6 +198,8 @@ def optimize_for_app(
         res = run_search(eng, evaluator)
         all_cfg.extend(res.evaluated)
         all_perf.extend(res.evaluated_perf.tolist())
+        if res.evaluated_values is not None:
+            all_values.append(res.evaluated_values)
         total_rounds += res.rounds
         if best is None or res.best_perf > best.best_perf:
             best = res
@@ -197,4 +208,33 @@ def optimize_for_app(
                         history=best.history, evaluated=all_cfg,
                         evaluated_perf=np.asarray(all_perf),
                         rounds=total_rounds, engine=best.engine,
-                        evaluator=evaluator)
+                        evaluator=evaluator,
+                        evaluated_values=(np.vstack(all_values)
+                                          if all_values else None))
+
+
+def multi_step_greedy(
+    stream,
+    space,
+    k: int = 3,
+    delta_p_threshold: float = 1e-3,
+    max_rounds: int = 40,
+    seed: int = 0,
+    init: Optional[Any] = None,
+    peak_weight_bits: int = 0,
+    peak_input_bits: int = 0,
+    pool_cap: int = 20000,
+    patience: int = 1,
+) -> SearchResult:
+    """Algorithm 1, single start (paper §4.3).  `k` trades off optimality
+    and per-round cost.  Formerly `repro.core.greedy.multi_step_greedy`
+    (that module is now a deprecated shim over this one); reproduces the
+    pre-refactor results bit-for-bit on a fixed seed."""
+    evaluator = Evaluator.for_space(stream, space,
+                                    peak_weight_bits=peak_weight_bits,
+                                    peak_input_bits=peak_input_bits)
+    engine = GreedyOptimizer(space, evaluator, k=k,
+                             delta_p_threshold=delta_p_threshold,
+                             max_rounds=max_rounds, seed=seed, init=init,
+                             pool_cap=pool_cap, patience=patience)
+    return run_search(engine, evaluator)

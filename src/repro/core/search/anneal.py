@@ -70,7 +70,7 @@ class AnnealOptimizer(Optimizer):
         return self.codec.decode(idx)
 
     def observe(self, pool: Sequence[Any], scores: np.ndarray) -> None:
-        scores = np.asarray(scores, dtype=np.float64)
+        scores = self._scalar(scores)
         self._track_best(pool, scores)
         if self._cur_idx is None:
             self._cur_idx = self._cand_idx

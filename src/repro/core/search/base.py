@@ -210,32 +210,50 @@ def codec_for(space: Any) -> SpaceCodec:
     raise TypeError(f"space {type(space).__name__} has no codec()")
 
 
+def _constraint_repairs(evaluator: Any, batch: Any, space: Any) -> Any:
+    """Chain the injected constraints' `repair` hooks (repro.dse) over a
+    batch; identity when the evaluator carries none."""
+    for c in getattr(evaluator, "constraints", ()):
+        fn = getattr(c, "repair", None)
+        if fn is not None:
+            batch = fn(batch, space)
+    return batch
+
+
 def repair_with(space: Any, evaluator: Any, cfg: Any) -> Any:
     """Apply the space's validity repair if it has one (Eq. 11/13 buffer
-    floors + area budget for the accelerator space; identity otherwise).
+    floors + area budget for the accelerator space; identity otherwise),
+    then any injected constraints' `repair` hooks.
 
     Prefers the evaluator's batch-scaled activation floor
     (`peak_input_bits_scaled`) because Eq. (13) multiplies the peak demand
     by the stream's batch size."""
     fn = getattr(space, "repair_for_peaks", None)
-    if fn is None:
-        return cfg
-    peak_in = getattr(evaluator, "peak_input_bits_scaled",
-                      getattr(evaluator, "peak_input_bits", 0))
-    return fn(cfg, getattr(evaluator, "peak_weight_bits", 0), peak_in)
+    if fn is not None:
+        peak_in = getattr(evaluator, "peak_input_bits_scaled",
+                          getattr(evaluator, "peak_input_bits", 0))
+        cfg = fn(cfg, getattr(evaluator, "peak_weight_bits", 0), peak_in)
+    if getattr(evaluator, "constraints", ()):
+        from repro.core.costmodel import ConfigBatch
+        batch = _constraint_repairs(evaluator,
+                                    ConfigBatch.from_configs([cfg]), space)
+        cfg = batch.to_configs()[0]
+    return cfg
 
 
 def repair_many_with(space: Any, evaluator: Any, batch: Any) -> Any:
     """Batched `repair_with`: route a whole population (ConfigBatch or
     config sequence) through `space.repair_for_peaks_many` with the
-    evaluator's peak floors.  Returns None when the space has no batched
-    repair (caller falls back to the scalar path)."""
+    evaluator's peak floors, then the injected constraints' `repair`
+    hooks.  Returns None when the space has no batched repair (caller
+    falls back to the scalar path)."""
     fn = getattr(space, "repair_for_peaks_many", None)
     if fn is None:
         return None
     peak_in = getattr(evaluator, "peak_input_bits_scaled",
                       getattr(evaluator, "peak_input_bits", 0))
-    return fn(batch, getattr(evaluator, "peak_weight_bits", 0), peak_in)
+    out = fn(batch, getattr(evaluator, "peak_weight_bits", 0), peak_in)
+    return _constraint_repairs(evaluator, out, space)
 
 
 # --------------------------------------------------------------------------
@@ -281,10 +299,13 @@ class SearchResult:
     best_perf: float
     history: List[Tuple[Any, float]]       # per-round incumbent
     evaluated: List[Any]                   # every scored config, in order
-    evaluated_perf: np.ndarray             # aligned scores
+    evaluated_perf: np.ndarray             # aligned scores (scalarized)
     rounds: int
     engine: str = ""
     evaluator: Any = dataclasses.field(default=None, repr=False)
+    # [N, M] objective-value rows when the evaluator scored a vector
+    # objective (e.g. `ParetoObjective`); None for scalar runs
+    evaluated_values: Optional[np.ndarray] = None
 
     def pareto_front(self, hw=None) -> List[ParetoPoint]:
         """Non-dominated (GOPS up, area down) subset of every evaluated
@@ -329,6 +350,15 @@ class Optimizer(abc.ABC):
     `pool = engine.propose()` -> `scores = evaluator(pool)` ->
     `engine.observe(pool, scores)` until `engine.done`.  Engines own their
     RNG, their incumbent/`history` bookkeeping, and their stopping rule.
+
+    Vector scores: an evaluator carrying a multi-objective (e.g.
+    `ParetoObjective`) may hand back an [N, M] value matrix instead of an
+    [N] score vector.  Engines stay single-objective internally — every
+    `observe` first routes scores through `_scalar`, which applies the
+    engine's `scalarizer` hook (installed by `make_engine` from the
+    evaluator's `scalarize`) so the incumbent/acceptance logic sees one
+    number per candidate while the driver keeps the full rows for the
+    Pareto front.
     """
 
     name: str = "engine"
@@ -338,6 +368,18 @@ class Optimizer(abc.ABC):
         self.best_perf: float = -np.inf
         self.history: List[Tuple[Any, float]] = []
         self.rounds: int = 0
+        # [N, M] -> [N] reduction for vector-scored pools; None = take the
+        # first objective column (by convention the perf-like term)
+        self.scalarizer: Optional[Callable[[np.ndarray], np.ndarray]] = None
+
+    def _scalar(self, scores) -> np.ndarray:
+        """Reduce evaluator output to the [N] vector engines optimize."""
+        scores = np.asarray(scores, dtype=np.float64)
+        if scores.ndim == 1:
+            return scores
+        if self.scalarizer is not None:
+            return np.asarray(self.scalarizer(scores), dtype=np.float64)
+        return scores[:, 0]
 
     @abc.abstractmethod
     def propose(self) -> List[Any]:
@@ -366,16 +408,26 @@ def run_search(engine: Optimizer, evaluator) -> SearchResult:
     Engines may propose either config-object lists or array-native
     `ConfigBatch` pools; batches stay arrays through scoring and are only
     materialized to dataclasses once, after the loop, for the
-    `SearchResult.evaluated` log."""
+    `SearchResult.evaluated` log.
+
+    When the evaluator returns an [N, M] objective-value matrix (vector
+    objective), the driver scalarizes ONCE through the engine's hook —
+    the engine then observes plain scalars (its `_scalar` is the identity
+    on 1-D input, so the stateful scalarizer is not applied twice) — and
+    the full rows are kept in `SearchResult.evaluated_values`."""
     pools: List[Any] = []
     perf: List[float] = []
+    value_rows: List[np.ndarray] = []
     while not engine.done:
         pool = engine.propose()
         if pool is None or len(pool) == 0:
             break
-        scores = evaluator(pool)
+        scores = np.asarray(evaluator(pool), dtype=np.float64)
+        if scores.ndim == 2:
+            value_rows.append(scores)
+            scores = engine._scalar(scores)
         pools.append(pool)
-        perf.extend(np.asarray(scores, dtype=np.float64).tolist())
+        perf.extend(scores.tolist())
         engine.observe(pool, scores)
     evaluated: List[Any] = []
     for pool in pools:
@@ -386,7 +438,9 @@ def run_search(engine: Optimizer, evaluator) -> SearchResult:
     if best is None and evaluated:          # engine kept no incumbent
         i = int(np.argmax(perf))
         best, best_perf = evaluated[i], float(perf[i])
+    values = np.vstack(value_rows) if value_rows else None
     return SearchResult(best=best, best_perf=best_perf,
                         history=list(engine.history), evaluated=evaluated,
                         evaluated_perf=np.asarray(perf), rounds=engine.rounds,
-                        engine=engine.name, evaluator=evaluator)
+                        engine=engine.name, evaluator=evaluator,
+                        evaluated_values=values)

@@ -82,6 +82,16 @@ class Evaluator:
     budget applied (0.0 on violation) — identical values to scoring the pool
     uncached, in any batch composition (`evaluate_stream_many` is row-wise
     independent).
+
+    Objective/constraint injection (the `repro.dse` facade): pass
+    `objective` (an object with `score(metrics) -> [N]`, or with
+    `values(metrics) -> [N, M]` + `scalarize` for vector objectives) and/or
+    `constraints` (objects with `feasible_mask(batch, metrics) -> bool[N]`)
+    to reshape what `evaluator(pool)` hands the engines.  The cache always
+    stores the *raw* (GOPS, area) metrics — Eq. 9-13 zeroing only — so one
+    cache serves every objective; objective scoring and constraint masking
+    are cheap elementwise post-passes.  With the defaults (`objective=None`,
+    `constraints=None`) the output is exactly the legacy contract above.
     """
 
     def __init__(self, stream: OpStream,
@@ -90,7 +100,9 @@ class Evaluator:
                  peak_input_bits: int = 0,
                  area_budget: float = 0.0,
                  cache_size: int = 1 << 16,
-                 backend: str = "numpy"):
+                 backend: str = "numpy",
+                 objective: Optional[Any] = None,
+                 constraints: Optional[Sequence[Any]] = None):
         self.stream = stream
         self.hw = hw or HardwareConstants()
         self.peak_weight_bits = peak_weight_bits
@@ -102,6 +114,8 @@ class Evaluator:
         self.peak_input_bits_scaled = peak_input_bits * max_batch
         self.area_budget = area_budget
         self.backend = backend
+        self.objective = objective
+        self.constraints = tuple(constraints or ())
         self._cache = _LRU(cache_size)
         self.n_batches = 0       # batched model invocations
         self.n_scored = 0        # configs actually sent to the model
@@ -110,40 +124,77 @@ class Evaluator:
     def for_space(cls, stream: OpStream, space,
                   peak_weight_bits: int = 0, peak_input_bits: int = 0,
                   cache_size: int = 1 << 16,
-                  backend: str = "numpy") -> "Evaluator":
+                  backend: str = "numpy",
+                  objective: Optional[Any] = None,
+                  constraints: Optional[Sequence[Any]] = None) -> "Evaluator":
         """Evaluator bound to a DesignSpace's hw constants + area budget."""
         return cls(stream, hw=space.hw,
                    peak_weight_bits=peak_weight_bits,
                    peak_input_bits=peak_input_bits,
                    area_budget=space.area_budget, cache_size=cache_size,
-                   backend=backend)
+                   backend=backend, objective=objective,
+                   constraints=constraints)
 
     # -------------------------------------------------------------- scoring
     def _score_batch(self, configs) -> Tuple[np.ndarray, np.ndarray]:
-        """Uncached path: ONE vectorized model call for the whole batch."""
+        """Uncached path: ONE vectorized model call for the whole batch.
+
+        Returns *raw* metrics: GOPS with only the Eq. 9-13 stream
+        constraints applied (what `performance_gops` does), plus areas.
+        Area-budget masking happens post-cache so the cached values are
+        objective-independent."""
         batch = ConfigBatch.from_configs(configs)
         perf = performance_gops(batch, self.stream, self.hw,
                                 self.peak_weight_bits, self.peak_input_bits,
                                 backend=self.backend)
         areas = area_many(batch, self.hw)
-        if self.area_budget > 0:
-            perf = np.where(areas <= self.area_budget, perf, 0.0)
         self.n_batches += 1
         self.n_scored += len(batch)
         return perf, areas
 
     def __call__(self, pool) -> np.ndarray:
-        return self.score_with_area(pool)[0]
+        batch = ConfigBatch.from_configs(pool)
+        perf, area = self._metrics_of(batch)
+        mask = self.feasible_mask(batch, {"perf": perf, "area": area})
+        metrics = {"perf": np.where(mask, perf, 0.0), "area": area}
+        if self.objective is None:
+            return metrics["perf"]
+        values_fn = getattr(self.objective, "values", None)
+        if values_fn is not None:            # vector objective: [N, M] rows
+            return values_fn(metrics)
+        return np.where(mask, self.objective.score(metrics), 0.0)
+
+    def feasible_mask(self, batch, metrics) -> np.ndarray:
+        """AND of the area budget and every injected constraint."""
+        mask = np.ones(len(batch), dtype=bool)
+        if self.area_budget > 0:
+            mask &= metrics["area"] <= self.area_budget
+        for c in self.constraints:
+            mask &= np.asarray(c.feasible_mask(batch, metrics), dtype=bool)
+        return mask
+
+    def scalarize(self, values: np.ndarray) -> np.ndarray:
+        """[N, M] objective rows -> [N] engine scores (vector objectives)."""
+        fn = getattr(self.objective, "scalarize", None)
+        if fn is not None:
+            return np.asarray(fn(values), dtype=np.float64)
+        return np.asarray(values, dtype=np.float64)[:, 0]
 
     def score_with_area(self, pool) -> Tuple[np.ndarray, np.ndarray]:
-        """(gops[N], area[N]) for the pool — a `ConfigBatch` or an
-        `AccelConfig` sequence — through the cache.
+        """(gops[N], area[N]) with the area budget applied to gops — the
+        legacy contract, independent of any injected objective."""
+        perf, area = self._metrics_of(ConfigBatch.from_configs(pool))
+        if self.area_budget > 0:
+            perf = np.where(area <= self.area_budget, perf, 0.0)
+        return perf, area
+
+    def _metrics_of(self, batch) -> Tuple[np.ndarray, np.ndarray]:
+        """Raw (gops[N], area[N]) for a `ConfigBatch` through the cache.
 
         One pass over the vectorized row keys resolves hits straight into
         the output arrays; the miss set is gathered by row index, scored in
         one batched model call, scattered back, and bulk-inserted into the
         LRU (single trim)."""
-        batch = ConfigBatch.from_configs(pool)
         keys = batch.row_keys()
         n = len(keys)
         perf = np.empty(n, dtype=np.float64)
@@ -182,7 +233,10 @@ class Evaluator:
         return perf, area
 
     def score_one(self, cfg: AccelConfig) -> float:
-        return float(self([cfg])[0])
+        s = np.asarray(self([cfg]), dtype=np.float64)
+        if s.ndim == 2:                     # vector objective: scalarize
+            s = self.scalarize(s)
+        return float(s[0])
 
     # ---------------------------------------------------------------- stats
     @property

@@ -108,7 +108,7 @@ class GeneticOptimizer(Optimizer):
         return self.codec.encode(cfgs)
 
     def observe(self, pool: Sequence[Any], scores: np.ndarray) -> None:
-        scores = np.asarray(scores, dtype=np.float64)
+        scores = self._scalar(scores)
         self._track_best(pool, scores)
         if self._pop_idx is not None:
             self.rounds += 1

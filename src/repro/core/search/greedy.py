@@ -139,6 +139,7 @@ class GreedyOptimizer(Optimizer):
 
     # ------------------------------------------------------------- observe
     def observe(self, pool: Sequence[Any], scores: np.ndarray) -> None:
+        scores = self._scalar(scores)
         if not self._initialized:
             self._initialized = True
             self._p0 = float(scores[0])

@@ -51,7 +51,7 @@ class RandomSearchOptimizer(Optimizer):
         return [repair_with(self.space, self.evaluator, c) for c in draws]
 
     def observe(self, pool: Sequence[Any], scores: np.ndarray) -> None:
-        self._track_best(pool, np.asarray(scores, dtype=np.float64))
+        self._track_best(pool, self._scalar(scores))
         self.rounds += 1
         self.history.append((self.best, self.best_perf))
 

@@ -20,7 +20,7 @@ import numpy as np
 from repro.core.costmodel import AccelConfig
 from repro.core.graph import ComputationGraph
 from repro.core.multiapp import AppSpec
-from repro.core.search import EngineSpec, optimize_for_app
+from repro.core.search import EngineSpec
 from repro.core.space import DesignSpace
 
 __all__ = ["RadarSummary", "radar_of_top_configs", "sensitivity_study"]
@@ -55,10 +55,18 @@ def radar_of_top_configs(name: str, spec: AppSpec, space: DesignSpace,
                          top_frac: float = 0.10,
                          max_rounds: int = 40,
                          engine: EngineSpec = "greedy") -> RadarSummary:
-    res = optimize_for_app(spec.stream, space, k=k, restarts=restarts,
-                           seed=seed, peak_weight_bits=spec.peak_weight_bits,
-                           peak_input_bits=spec.peak_input_bits,
-                           max_rounds=max_rounds, engine=engine)
+    """Single-app `MaxPerf` DSE through the declarative `repro.dse.Study`
+    front door (same seeds and evaluator as the historical
+    `optimize_for_app` call — results are unchanged), summarized as the
+    paper's radar-chart means."""
+    from repro.dse import MaxPerf, SearchBudget, Study
+
+    study = Study(apps=[spec], space=space, objective=MaxPerf(),
+                  engine=engine,
+                  budget=SearchBudget(k=k, restarts=restarts,
+                                      max_rounds=max_rounds),
+                  seed=seed, name="sensitivity")
+    res = study.run().per_app_results[spec.name]
     perf = res.evaluated_perf
     valid = perf > 0
     thresh = np.quantile(perf[valid], 1.0 - top_frac) if valid.any() else 0.0

@@ -1,0 +1,49 @@
+"""Declarative design-space-exploration facade — one front door for every
+DSE consumer.
+
+The optimization *problem* (paper §4.3) is a first-class value here:
+
+  * `Objective`  — what "better" means: `MaxPerf` (per-app GOPS),
+    `PerfPerArea`, `GeomeanAcrossApps` (§5.1 joint selection), or the
+    vector-valued `ParetoObjective(["perf", "-area"])` whose scalarization
+    (weighted-Chebyshev or 2-D hypervolume contribution) plugs straight
+    into the engines' ask/tell loop while the full front is retained.
+  * `Constraint` — what "feasible" means: `AreaBudget`, `PeakBuffers`
+    (Eq. 11/13 floors, with batched `repair`), `UserConstraint` lambdas.
+  * `Study`      — apps x space x objective x constraints x engine x
+    `SearchBudget`, with `.run() -> StudyResult` and JSON persistence
+    (`StudyResult.save`/`load`).
+
+CLI: ``python -m repro.dse --apps resnet --apps ptb --engine genetic``
+(see `repro.dse.cli`).  `run_multiapp_study`, the sensitivity radar, the
+generic branch of `autotune_search`, and the examples are all thin
+compositions over `Study`.
+"""
+
+from repro.dse.constraints import (AreaBudget, Constraint, PeakBuffers,
+                                   UserConstraint, feasible_mask_all)
+from repro.dse.objectives import (OBJECTIVES, GeomeanAcrossApps, MaxPerf,
+                                  Objective, ParetoObjective, PerfPerArea,
+                                  geomean, make_objective)
+from repro.dse.study import FrontPoint, SearchBudget, Study, StudyResult
+
+__all__ = [
+    "Objective", "MaxPerf", "PerfPerArea", "GeomeanAcrossApps",
+    "ParetoObjective", "OBJECTIVES", "make_objective", "geomean",
+    "Constraint", "AreaBudget", "PeakBuffers", "UserConstraint",
+    "feasible_mask_all",
+    "Study", "StudyResult", "SearchBudget", "FrontPoint",
+    "study_from_cli", "main",
+]
+
+
+def study_from_cli(argv=None):
+    """Build a `Study` from command-line flags (lazy import: argparse-only
+    consumers shouldn't pay for it)."""
+    from repro.dse.cli import study_from_cli as _impl
+    return _impl(argv)
+
+
+def main(argv=None) -> int:
+    from repro.dse.cli import main as _impl
+    return _impl(argv)

@@ -1,0 +1,7 @@
+"""`python -m repro.dse` entry point (see `repro.dse.cli`)."""
+
+import sys
+
+from repro.dse.cli import main
+
+sys.exit(main())

@@ -5,12 +5,12 @@ import pytest
 
 from repro.core import apps
 from repro.core.costmodel import AccelConfig, performance_gops
-from repro.core.greedy import multi_step_greedy
 from repro.core.multiapp import AppSpec, run_multiapp_study
 from repro.core.search import (AnnealOptimizer, Evaluator, GeneticOptimizer,
                                GreedyOptimizer, RandomSearchOptimizer,
-                               make_engine, optimize_for_app,
-                               pareto_front_indices, run_search)
+                               make_engine, multi_step_greedy,
+                               optimize_for_app, pareto_front_indices,
+                               run_search)
 from repro.core.space import default_space
 
 
