@@ -1,0 +1,150 @@
+"""Study scaling: parallel per-app search throughput and determinism.
+
+The ROADMAP's "distributed million-config studies" item lands here: a
+`Study` over the seven paper applications (§5.1) fans its per-app
+searches over a process pool (`Study(workers=N)`), and this benchmark
+keeps two promises honest:
+
+  determinism — the `StudyResult` JSON is byte-identical at every worker
+                count (asserted every run; a mismatch is a hard failure,
+                not a statistic).
+  scaling     — aggregate search throughput (configs scored / wall
+                second) at workers = 1, 2, 4, using the `random` engine
+                at a fixed 4096 configs per app so every setting does
+                exactly the same work.
+
+Results go to BENCH_study.json (repo root — the committed file is the CI
+baseline) together with the host's `cpu_count`, because the speedup is
+physical: on a single-core container the pool can only lose.  The
+`--check` gate therefore applies the minimum-speedup bar only when the
+host has >= 4 CPUs (the CI runners do); determinism is gated everywhere.
+
+Usage:
+  PYTHONPATH=src python benchmarks/study_scaling.py              # full
+  PYTHONPATH=src python benchmarks/study_scaling.py --smoke --check
+  PYTHONPATH=src python benchmarks/study_scaling.py --zoo        # + traced
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from pathlib import Path
+
+from repro.core import apps as core_apps
+
+ROOT = Path(__file__).resolve().parents[1]
+DEFAULT_OUT = ROOT / "BENCH_study.json"
+
+
+def run_scaling(app_names, configs_per_app: int, workers_list,
+                seed: int = 0, verbose: bool = True) -> dict:
+    from repro.dse import SearchBudget, Study
+
+    # random engine: exactly batch * max_rounds configs per restart, so
+    # every worker setting scores an identical, known workload
+    batch = min(512, configs_per_app)
+    rounds = max(1, configs_per_app // batch)
+    budget = SearchBudget(restarts=1, max_rounds=rounds,
+                          engine_kwargs={"batch": batch})
+    total_configs = len(app_names) * batch * rounds
+
+    runs = {}
+    outputs = set()
+    for w in workers_list:
+        study = Study(apps=list(app_names), engine="random", budget=budget,
+                      seed=seed, workers=w, name="scaling")
+        t0 = time.perf_counter()
+        result = study.run()
+        dt = time.perf_counter() - t0
+        outputs.add(json.dumps(result.to_json(), sort_keys=True))
+        runs[str(w)] = {"seconds": dt, "configs_per_s": total_configs / dt}
+        if verbose:
+            print(f"[study-scaling] workers={w}: {dt:7.2f} s  "
+                  f"{total_configs / dt:10.0f} configs/s")
+
+    deterministic = len(outputs) == 1
+    base = runs[str(min(workers_list))]["seconds"]
+    results = {
+        "apps": list(app_names),
+        "configs_per_app": batch * rounds,
+        "total_configs": total_configs,
+        "engine": "random",
+        "seed": seed,
+        "cpu_count": os.cpu_count(),
+        "workers": runs,
+        "speedups": {w: base / runs[w]["seconds"] for w in runs},
+        "best_speedup": max(base / r["seconds"] for r in runs.values()),
+        "deterministic": deterministic,
+    }
+    if verbose:
+        print(f"[study-scaling] deterministic across workers: "
+              f"{deterministic}  (cpu_count={results['cpu_count']}, "
+              f"best speedup {results['best_speedup']:.2f}x)")
+    return results
+
+
+def check_gate(results: dict, min_speedup: float, min_cpus: int = 4) -> None:
+    """Determinism always gates; the speedup bar only where it is
+    physically reachable (>= `min_cpus` host CPUs, non-smoke run)."""
+    if not results["deterministic"]:
+        print("[check] FAIL: StudyResult differs across worker counts")
+        raise SystemExit(2)
+    print("[check] determinism ok: byte-identical at every worker count")
+    cpus = results.get("cpu_count") or 1
+    if results.get("smoke"):
+        print("[check] smoke run: skipping the speedup bar")
+        return
+    if cpus < min_cpus:
+        print(f"[check] host has {cpus} CPU(s) < {min_cpus}: speedup bar "
+              "not physically reachable here, skipping")
+        return
+    best = float(results["best_speedup"])
+    if best < min_speedup:
+        print(f"[check] FAIL: best speedup {best:.2f}x < "
+              f"{min_speedup:g}x on a {cpus}-CPU host")
+        raise SystemExit(2)
+    print(f"[check] speedup ok: {best:.2f}x >= {min_speedup:g}x")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--configs-per-app", type=int, default=4096)
+    ap.add_argument("--workers", type=int, nargs="+", default=[1, 2, 4])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--zoo", action="store_true",
+                    help="add every traced model-zoo workload to the app "
+                         "set (needs jax)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: 3 apps, 512 configs/app, workers 1+2; "
+                         "the --check gate then tests determinism only")
+    ap.add_argument("--out", type=Path, default=DEFAULT_OUT,
+                    help=f"JSON output path (default {DEFAULT_OUT})")
+    ap.add_argument("--check", action="store_true",
+                    help="gate: fail on any cross-worker result mismatch; "
+                         "on >=4-CPU hosts also require --min-speedup")
+    ap.add_argument("--min-speedup", type=float, default=3.0)
+    args = ap.parse_args(argv)
+
+    names = list(core_apps.all_app_names(include_zoo=args.zoo))
+    workers = sorted(set(args.workers))
+    configs = args.configs_per_app
+    if args.smoke:
+        names = names[:3]
+        configs = min(configs, 512)
+        workers = [w for w in workers if w <= 2] or [1, 2]
+
+    results = run_scaling(names, configs, workers, seed=args.seed)
+    results["smoke"] = bool(args.smoke)
+    args.out.write_text(json.dumps(results, indent=2) + "\n")
+    print(f"[study-scaling] wrote {args.out}")
+    if args.check:
+        check_gate(results, args.min_speedup)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -82,7 +82,7 @@ class CellEvaluator:
 
     def __init__(self, arch_name: str, shape_name: str, multi_pod: bool,
                  cache_dir: str = "experiments/autotune",
-                 hbm_limit: float = 16e9):
+                 hbm_limit: float = 16e9, compile_workers: int = 1):
         self.arch_name = arch_name
         self.shape_name = shape_name
         self.multi_pod = multi_pod
@@ -91,6 +91,7 @@ class CellEvaluator:
         self.dir = Path(cache_dir) / self.cell
         self.dir.mkdir(parents=True, exist_ok=True)
         self.hbm_limit = hbm_limit
+        self.compile_workers = max(1, int(compile_workers))
         self.n_compiles = 0
 
     def evaluate(self, pt: ExecPoint) -> Dict[str, Any]:
@@ -118,6 +119,19 @@ class CellEvaluator:
         if roof["peak_memory_per_chip"] > self.hbm_limit:
             return 0.0
         return 1.0 / max(roof["roofline_s"], 1e-12)
+
+    def score_batch(self, pts: Sequence[ExecPoint]) -> List[float]:
+        """Score a pool, overlapping compiles on `compile_workers` threads
+        (each evaluation is an external XLA compile, so threads overlap
+        fine; per-point cache files are distinct).  Results come back in
+        pool order, so engines see exactly the serial scores."""
+        pts = list(pts)
+        if self.compile_workers <= 1 or len(pts) <= 1:
+            return [self.score(p) for p in pts]
+        from concurrent.futures import ThreadPoolExecutor
+        with ThreadPoolExecutor(
+                max_workers=min(self.compile_workers, len(pts))) as tp:
+            return list(tp.map(self.score, pts))
 
 
 def _domains_for(shape_mode: str, has_moe: bool) -> Dict[str, Tuple]:
@@ -164,7 +178,12 @@ def autotune_search(evaluator: CellEvaluator, *, engine: EngineSpec = "greedy",
     from repro.dse import SearchBudget, Study
 
     space = exec_space(shape_mode, has_moe)
-    fev = FunctionEvaluator(evaluator.score)
+    # cache misses of each pool flow through score_batch in one call, so a
+    # CellEvaluator(compile_workers=N) overlaps its expensive compiles;
+    # score-only evaluators (duck-typed) fall back to the scalar path
+    fev = FunctionEvaluator(evaluator.score,
+                            batch_score_fn=getattr(evaluator, "score_batch",
+                                                   None))
     kw: Dict[str, Any] = {"chains": 2, "population": 6, "batch": 4,
                           "elite": 1}
     kw.update(engine_kwargs)

@@ -187,30 +187,16 @@ def optimize_for_app(
     kw: Dict[str, Any] = {"k": k, "patience": 3, "max_rounds": max_rounds}
     kw.update(engine_kwargs or {})
     seed = kw.pop("seed", seed)       # engine_kwargs may override the base
-    best: Optional[SearchResult] = None
-    all_cfg: List[Any] = []
-    all_perf: List[float] = []
-    all_values: List[Any] = []
-    total_rounds = 0
+    # restart results reduce through the canonical SearchResult.merge
+    # (earliest-max incumbent, logs concatenated in restart order) — the
+    # same deterministic reduce the parallel execution layer uses for
+    # worker shards, so serial and fanned-out runs agree bit-for-bit
+    results: List[SearchResult] = []
     for r in range(restarts):
         eng = make_engine(engine, space, evaluator,
                           seed=seed + 1000 * r, **kw)
-        res = run_search(eng, evaluator)
-        all_cfg.extend(res.evaluated)
-        all_perf.extend(res.evaluated_perf.tolist())
-        if res.evaluated_values is not None:
-            all_values.append(res.evaluated_values)
-        total_rounds += res.rounds
-        if best is None or res.best_perf > best.best_perf:
-            best = res
-    assert best is not None
-    return SearchResult(best=best.best, best_perf=best.best_perf,
-                        history=best.history, evaluated=all_cfg,
-                        evaluated_perf=np.asarray(all_perf),
-                        rounds=total_rounds, engine=best.engine,
-                        evaluator=evaluator,
-                        evaluated_values=(np.vstack(all_values)
-                                          if all_values else None))
+        results.append(run_search(eng, evaluator))
+    return SearchResult.merge(results, evaluator=evaluator)
 
 
 def multi_step_greedy(

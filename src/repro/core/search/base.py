@@ -307,6 +307,45 @@ class SearchResult:
     # objective (e.g. `ParetoObjective`); None for scalar runs
     evaluated_values: Optional[np.ndarray] = None
 
+    @classmethod
+    def merge(cls, results: Sequence["SearchResult"],
+              evaluator: Any = None) -> "SearchResult":
+        """Deterministic reduce over restart/shard results.
+
+        Evaluated logs concatenate in the *given* order (callers pass
+        results in canonical task order, never completion order, so the
+        merged log is invariant to how the work was scheduled); the
+        incumbent is the earliest result holding the maximum `best_perf`
+        (strict ``>`` — exactly the historical multi-restart rule) and
+        contributes its `history`/`engine`.  `rounds` sum.  `evaluator`
+        defaults to the first result's handle."""
+        results = list(results)
+        if not results:
+            raise ValueError("cannot merge zero SearchResults")
+        best = results[0]
+        for r in results[1:]:
+            if r.best_perf > best.best_perf:
+                best = r
+        evaluated: List[Any] = []
+        perf: List[float] = []
+        values: List[np.ndarray] = []
+        rounds = 0
+        for r in results:
+            evaluated.extend(r.evaluated)
+            perf.extend(np.asarray(r.evaluated_perf,
+                                   dtype=np.float64).tolist())
+            if r.evaluated_values is not None:
+                values.append(r.evaluated_values)
+            rounds += int(r.rounds)
+        if evaluator is None:
+            evaluator = next((r.evaluator for r in results
+                              if r.evaluator is not None), None)
+        return cls(best=best.best, best_perf=float(best.best_perf),
+                   history=list(best.history), evaluated=evaluated,
+                   evaluated_perf=np.asarray(perf), rounds=rounds,
+                   engine=best.engine, evaluator=evaluator,
+                   evaluated_values=(np.vstack(values) if values else None))
+
     def pareto_front(self, hw=None) -> List[ParetoPoint]:
         """Non-dominated (GOPS up, area down) subset of every evaluated
         config — the multi-objective mode usable after ANY engine run.

@@ -238,6 +238,32 @@ class Evaluator:
             s = self.scalarize(s)
         return float(s[0])
 
+    # ------------------------------------------------------- shard merging
+    def cache_export(self) -> Dict[bytes, Tuple[float, float]]:
+        """Snapshot of the raw-metric cache: content-addressed row key ->
+        (gops, area).  Keys are pure functions of config content (vectorized
+        canonical-field-matrix row bytes), independent of scoring order,
+        worker identity, or shard composition — i.e. **shard-safe**: two
+        evaluator shards that score the same config produce the same key
+        and the same value, so exports merge without conflicts."""
+        return dict(self._cache.data)
+
+    def cache_merge(self, exported: Dict[bytes, Tuple[float, float]]) -> int:
+        """Fold a worker shard's `cache_export` into this evaluator.
+
+        First-writer-wins per key; because keys are content-addressed and
+        values deterministic, the merged cache *values* are invariant to
+        merge order and shard count (only LRU recency differs).  Returns
+        the number of new entries."""
+        data = self._cache.data
+        new = 0
+        for k, v in exported.items():
+            if k not in data:
+                data[k] = (float(v[0]), float(v[1]))
+                new += 1
+        self._cache.trim()
+        return new
+
     # ---------------------------------------------------------------- stats
     @property
     def cache_hits(self) -> int:
@@ -316,6 +342,22 @@ class FunctionEvaluator:
 
     def score_one(self, cfg: Any) -> float:
         return float(self([cfg])[0])
+
+    def cache_export(self) -> Dict[Tuple, float]:
+        """Shard-safe cache snapshot (config-content key -> score)."""
+        return dict(self._cache.data)
+
+    def cache_merge(self, exported: Dict[Tuple, float]) -> int:
+        """Fold another FunctionEvaluator shard's export in (first-writer-
+        wins per content key; values are deterministic so order is moot)."""
+        data = self._cache.data
+        new = 0
+        for k, v in exported.items():
+            if k not in data:
+                data[k] = v
+                new += 1
+        self._cache.trim()
+        return new
 
     def stats(self) -> Dict[str, int]:
         return {"scored": self.n_scored, "cache_hits": self._cache.hits,

@@ -13,6 +13,11 @@ The optimization *problem* (paper §4.3) is a first-class value here:
   * `Study`      — apps x space x objective x constraints x engine x
     `SearchBudget`, with `.run() -> StudyResult` and JSON persistence
     (`StudyResult.save`/`load`).
+  * `ParallelExecutor` — `Study(..., workers=N)` fans the per-app
+    searches over a process pool (deterministic: results are invariant
+    to worker count), `Study.run(checkpoint_path=...)` streams
+    crash-safe progress fragments, and `Study.resume(path)` continues a
+    killed study to a bit-identical result (`repro.dse.parallel`).
 
 CLI: ``python -m repro.dse --apps resnet --apps ptb --engine genetic``
 (see `repro.dse.cli`).  `run_multiapp_study`, the sensitivity radar, the
@@ -21,18 +26,26 @@ compositions over `Study`.
 """
 
 from repro.dse.constraints import (AreaBudget, Constraint, PeakBuffers,
-                                   UserConstraint, feasible_mask_all)
+                                   UserConstraint, constraint_from_describe,
+                                   feasible_mask_all)
 from repro.dse.objectives import (OBJECTIVES, GeomeanAcrossApps, MaxPerf,
                                   Objective, ParetoObjective, PerfPerArea,
                                   geomean, make_objective)
+from repro.dse.parallel import (EvalParams, FaultPlan,
+                                ParallelExecutionWarning, ParallelExecutor,
+                                canonical_front_indices, merge_pareto_fronts,
+                                score_population_sharded)
 from repro.dse.study import FrontPoint, SearchBudget, Study, StudyResult
 
 __all__ = [
     "Objective", "MaxPerf", "PerfPerArea", "GeomeanAcrossApps",
     "ParetoObjective", "OBJECTIVES", "make_objective", "geomean",
     "Constraint", "AreaBudget", "PeakBuffers", "UserConstraint",
-    "feasible_mask_all",
+    "feasible_mask_all", "constraint_from_describe",
     "Study", "StudyResult", "SearchBudget", "FrontPoint",
+    "ParallelExecutor", "ParallelExecutionWarning", "FaultPlan",
+    "EvalParams", "canonical_front_indices", "merge_pareto_fronts",
+    "score_population_sharded",
     "study_from_cli", "main",
 ]
 

@@ -20,6 +20,12 @@ the sensitivity scripts:
     PYTHONPATH=src python -m repro.dse --apps qwen2-0.5b:decode \\
         --weight-peak-mode strict
 
+    # fan per-app searches over 4 workers with crash-safe checkpoints;
+    # a killed run continues via --resume (bit-identical result)
+    PYTHONPATH=src python -m repro.dse --apps resnet --apps ptb \\
+        --apps wdl --workers 4 --checkpoint-every 1
+    PYTHONPATH=src python -m repro.dse --resume experiments/dse_study.json.ckpt
+
 Every run persists a `StudyResult` JSON (default
 ``experiments/dse_study.json``) for cross-run comparison;
 ``benchmarks/plot_shootout.py --study <json>`` renders Pareto-front
@@ -107,6 +113,19 @@ def build_parser() -> argparse.ArgumentParser:
                     help=f"StudyResult JSON path  [default: {DEFAULT_OUT}]")
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-scale CI budget (k=2, 1 restart, 4 rounds)")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="process-pool width for the per-app searches; "
+                         "results are bit-identical at any value  "
+                         "[default: 1 = serial]")
+    ap.add_argument("--checkpoint-every", type=int, default=None,
+                    metavar="K",
+                    help="write a crash-safe checkpoint (<out>.ckpt) after "
+                         "every K completed per-app searches; resume a "
+                         "killed run with --resume  [default: off]")
+    ap.add_argument("--resume", type=Path, default=None, metavar="CKPT",
+                    help="continue a killed study from its checkpoint file "
+                         "(produces the same result the uninterrupted run "
+                         "would have)")
     return ap
 
 
@@ -145,7 +164,7 @@ def study_from_cli(argv: Optional[List[str]] = None
                   top_frac=args.top_frac,
                   area_budgets=args.budgets,
                   weight_peak_mode=args.weight_peak_mode,
-                  name="cli")
+                  name="cli", workers=args.workers)
     return study, args
 
 
@@ -181,7 +200,16 @@ def _print_result(result: StudyResult) -> None:
 
 def main(argv: Optional[List[str]] = None) -> int:
     study, args = study_from_cli(argv)
-    result = study.run()
+    if args.resume is not None:
+        if not args.resume.exists():
+            raise SystemExit(f"--resume: no checkpoint at {args.resume}")
+        result = Study.resume(args.resume, workers=args.workers)
+    elif args.checkpoint_every is not None:
+        ckpt = args.out.with_name(args.out.name + ".ckpt")
+        result = study.run(checkpoint_path=ckpt,
+                           checkpoint_every=args.checkpoint_every)
+    else:
+        result = study.run()
     _print_result(result)
 
     if args.radar:

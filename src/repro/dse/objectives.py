@@ -260,9 +260,26 @@ OBJECTIVES = {
 
 
 def make_objective(spec) -> Objective:
-    """Objective from a name, class, or instance."""
+    """Objective from a name, class, instance, or `describe()` record.
+
+    The dict form is the inverse of `Objective.describe()` (used by study
+    checkpoints to round-trip the problem spec through JSON): ``{"name":
+    "pareto", "terms": [...], "method": ..., "weights": [...]}`` rebuilds a
+    `ParetoObjective`; the scalar objectives rebuild from their name alone.
+    """
     if isinstance(spec, Objective):
         return spec
+    if isinstance(spec, dict):
+        name = spec.get("name")
+        if name not in OBJECTIVES:
+            raise ValueError(
+                f"objective {name!r} is not reconstructible from its "
+                f"describe() record; available: {sorted(OBJECTIVES)}")
+        if name == "pareto":
+            return ParetoObjective(terms=spec.get("terms", ("perf", "-area")),
+                                   method=spec.get("method", "chebyshev"),
+                                   weights=spec.get("weights"))
+        return OBJECTIVES[name]()
     if isinstance(spec, str):
         try:
             return OBJECTIVES[spec]()

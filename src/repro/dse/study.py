@@ -38,21 +38,27 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import os
 from pathlib import Path
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core.costmodel import (AccelConfig, ConfigBatch, OpStream,
+from repro.core.costmodel import (AccelConfig, ConfigBatch,
+                                  HardwareConstants, OpStream,
                                   area_many, performance_gops)
 from repro.core.multiapp import AppSpec, MultiAppResult
 from repro.core.search import (EngineSpec, Evaluator, SearchResult,
                                optimize_for_app, pareto_front_indices)
 from repro.core.space import DesignSpace, default_space
 from repro.dse.constraints import (AreaBudget, Constraint, PeakBuffers,
+                                   constraint_from_describe,
                                    feasible_mask_all)
 from repro.dse.objectives import (GeomeanAcrossApps, MaxPerf, Objective,
                                   ParetoObjective, geomean, make_objective)
+from repro.dse.parallel import (EvalParams, ParallelExecutor,
+                                canonical_front_indices, _cross_eval_task,
+                                _search_app_task, shard_rows)
 
 __all__ = ["SearchBudget", "Study", "StudyResult", "FrontPoint"]
 
@@ -211,7 +217,9 @@ class Study:
                  max_candidates_per_app: int = 200,
                  area_budgets: Optional[Sequence[float]] = None,
                  weight_peak_mode: str = "streaming",
-                 name: str = "study"):
+                 name: str = "study",
+                 workers: int = 1,
+                 executor: Optional[ParallelExecutor] = None):
         self.name = name
         self.engine = engine
         self.budget = SearchBudget.of(budget)
@@ -221,6 +229,22 @@ class Study:
         self.max_candidates_per_app = max_candidates_per_app
         self.weight_peak_mode = weight_peak_mode
         self.evaluator = evaluator
+        # execution resources (never part of the problem spec: `meta` and
+        # every result stay byte-identical across worker counts)
+        self.workers = max(1, int(workers))
+        self.executor = executor
+        #: columns below this count keep the cross-eval stage serial (the
+        #: fan-out only pays for itself on big candidate sets); tests drop
+        #: it to force the sharded path
+        self.cross_eval_shard_min = 256
+        self._resume_state: Dict[int, SearchResult] = {}
+        self._user_area_budgets = (list(float(b) for b in area_budgets)
+                                   if area_budgets is not None else None)
+        # name sources survive to the checkpoint record so `Study.resume`
+        # can rebuild the specs; None marks an AppSpec passed directly
+        # (runnable, but not resumable from JSON)
+        self._app_sources: List[Optional[str]] = [
+            a if isinstance(a, str) else None for a in apps]
 
         self.specs: List[AppSpec] = [
             a if isinstance(a, AppSpec)
@@ -320,14 +344,22 @@ class Study:
                     self._peak_override.input_bits)
         return spec.peak_weight_bits, spec.peak_input_bits
 
-    def _make_evaluator(self, spec: AppSpec) -> Evaluator:
+    def _eval_params(self, spec: AppSpec) -> EvalParams:
+        """Picklable recipe for this app's evaluator shard (each call deep-
+        copies any stateful objective, so shards never share state)."""
         pw, pi = self._peaks_for(spec)
-        return Evaluator(spec.stream, hw=self.space.hw,
-                         peak_weight_bits=pw, peak_input_bits=pi,
-                         area_budget=self._search_area_budget,
-                         backend=self.backend,
-                         objective=self._engine_objective(),
-                         constraints=self._extra)
+        return EvalParams(stream=spec.stream, hw=self.space.hw,
+                          peak_weight_bits=pw, peak_input_bits=pi,
+                          area_budget=self._search_area_budget,
+                          backend=self.backend,
+                          objective=self._engine_objective(),
+                          constraints=tuple(self._extra))
+
+    def _make_evaluator(self, spec: AppSpec) -> Evaluator:
+        return self._eval_params(spec).build()
+
+    def _executor(self) -> ParallelExecutor:
+        return self.executor or ParallelExecutor(workers=self.workers)
 
     def _meta(self) -> Dict:
         eng = (self.engine if isinstance(self.engine, str)
@@ -350,23 +382,104 @@ class Study:
         }
 
     # ---------------------------------------------------------------- run
-    def run(self) -> StudyResult:
+    def run(self, checkpoint_path=None, checkpoint_every: int = 1,
+            on_checkpoint: Optional[Any] = None) -> StudyResult:
+        """Execute the study.
+
+        `checkpoint_path` streams crash-safe `StudyResult` fragments: after
+        every `checkpoint_every` completed per-app searches the full
+        progress record is atomically rewritten (tmp + rename), so a killed
+        study resumes mid-run via `Study.resume(path)` and — because every
+        per-app search is a pure function of its canonical seed and the
+        synthesis stages are deterministic — produces output bit-identical
+        to an uninterrupted run.  The file is removed on success.
+        `on_checkpoint(n_completed)` fires after each write (progress hook;
+        exceptions it raises abort the run, leaving the checkpoint on
+        disk — the test suite's crash simulation).
+
+        With `workers > 1` (or an injected `executor`) the per-app searches
+        fan out over a process pool; results reduce in canonical app order
+        regardless of completion order, so the `StudyResult` is invariant
+        to worker count."""
         if self.evaluator is not None:
+            if checkpoint_path is not None:
+                raise ValueError("generic (evaluator-mode) studies run as "
+                                 "one indivisible search; checkpointing "
+                                 "has no unit boundary to write at")
             return self._run_generic()
 
-        per_app_results: Dict[str, SearchResult] = {}
-        for i, spec in enumerate(self.specs):
-            ev = self._make_evaluator(spec)
-            res = optimize_for_app(
-                spec.stream, self._search_space,
-                k=self.budget.k, restarts=self.budget.restarts,
-                seed=self.seed + 7919 * i,
-                max_rounds=self.budget.max_rounds,
-                engine=self.engine,
-                engine_kwargs=dict(self.budget.engine_kwargs) or None,
-                evaluator=ev)
-            per_app_results[spec.name] = res
+        self._ckpt_every = max(1, int(checkpoint_every))
+        per_app_results = self._run_app_searches(
+            checkpoint_path, self._ckpt_every, on_checkpoint)
+        result = self._synthesize(per_app_results)
+        if checkpoint_path is not None:
+            Path(checkpoint_path).unlink(missing_ok=True)
+        return result
 
+    # ----------------------------------------------- per-app search phase
+    def _run_app_searches(self, checkpoint_path, checkpoint_every,
+                          on_checkpoint) -> Dict[str, SearchResult]:
+        results: Dict[int, SearchResult] = dict(self._resume_state)
+        self._resume_state = {}
+        todo = [i for i in range(len(self.specs)) if i not in results]
+        if todo:
+            if checkpoint_path is not None:
+                self._require_resumable()
+            payloads = [self._task_payload(i) for i in todo]
+            state = {"since_ckpt": 0}
+
+            def on_result(pos: int, rec: Dict) -> None:
+                i = todo[pos]
+                results[i] = self._rebuild_result(i, rec)
+                if checkpoint_path is None:
+                    return
+                state["since_ckpt"] += 1
+                if (state["since_ckpt"] >= checkpoint_every
+                        or len(results) == len(self.specs)):
+                    state["since_ckpt"] = 0
+                    self._write_checkpoint(checkpoint_path, results)
+                    if on_checkpoint is not None:
+                        on_checkpoint(len(results))
+
+            self._executor().map(_search_app_task, payloads,
+                                 on_result=on_result)
+        return {self.specs[i].name: results[i]
+                for i in range(len(self.specs))}
+
+    def _task_payload(self, i: int) -> Dict:
+        spec = self.specs[i]
+        return {"name": spec.name,
+                "spec_index": i,
+                "space": self._search_space,
+                "engine": self.engine,
+                "k": self.budget.k,
+                "restarts": self.budget.restarts,
+                "max_rounds": self.budget.max_rounds,
+                "engine_kwargs": dict(self.budget.engine_kwargs) or None,
+                "seed": self.seed + 7919 * i,
+                "params": self._eval_params(spec)}
+
+    def _rebuild_result(self, i: int, rec: Dict) -> SearchResult:
+        """Portable worker record -> SearchResult with a parent-side
+        evaluator warmed from the worker shard's raw-metric cache (the
+        synthesis stages re-read raw metrics; merged keys are content-
+        addressed, so values are identical to an in-process run)."""
+        ev = self._make_evaluator(self.specs[i])
+        if rec.get("cache"):
+            ev.cache_merge(rec["cache"])
+        batch = rec.get("evaluated")
+        evaluated = batch.to_configs() if batch is not None else []
+        return SearchResult(
+            best=rec["best"], best_perf=float(rec["best_perf"]),
+            history=list(rec.get("history", [])), evaluated=evaluated,
+            evaluated_perf=np.asarray(rec["evaluated_perf"],
+                                      dtype=np.float64),
+            rounds=int(rec["rounds"]), engine=rec.get("engine", ""),
+            evaluator=ev, evaluated_values=rec.get("evaluated_values"))
+
+    # ----------------------------------------------------- synthesis stage
+    def _synthesize(self, per_app_results: Dict[str, SearchResult]
+                    ) -> StudyResult:
         vector = isinstance(self.objective, ParetoObjective)
         per_app = {}
         for name, res in per_app_results.items():
@@ -415,6 +528,160 @@ class Study:
                            best_score=float(res.best_perf), per_app=per_app,
                            per_app_results={"space": res})
 
+    # --------------------------------------------- checkpointing / resume
+    def _require_resumable(self) -> None:
+        """Fail fast (before the first fragment is written) when this study
+        cannot be rebuilt from JSON: checkpoints must round-trip the whole
+        problem spec, not just the progress."""
+        if any(s is None for s in self._app_sources):
+            raise ValueError(
+                "checkpointing needs name-built apps; AppSpec objects "
+                "passed directly cannot be rebuilt from a JSON checkpoint")
+        if not isinstance(self.engine, str):
+            raise ValueError("checkpointing needs a named engine "
+                             "(factories cannot be rebuilt from JSON)")
+        make_objective(self.objective.describe())      # raises if custom
+        for c in self.constraints:
+            constraint_from_describe(c.describe())     # raises if custom
+
+    def _codec(self):
+        if getattr(self, "_codec_cache", None) is None:
+            self._codec_cache = self._search_space.codec()
+        return self._codec_cache
+
+    def _spec_record(self) -> Dict:
+        """The full declarative problem (everything `from_spec` needs)."""
+        return {
+            "name": self.name,
+            "apps": list(self._app_sources),
+            "engine": self.engine,
+            "objective": self.objective.describe(),
+            "constraints": [c.describe() for c in self.constraints],
+            "budget": dataclasses.asdict(self.budget),
+            "seed": self.seed,
+            "backend": self.backend,
+            "top_frac": self.top_frac,
+            "max_candidates_per_app": self.max_candidates_per_app,
+            "area_budgets": self._user_area_budgets,
+            "weight_peak_mode": self.weight_peak_mode,
+            "space": {"domains": {k: [int(v) for v in dom]
+                                  for k, dom in self.space.domains.items()},
+                      "hw": dataclasses.asdict(self.space.hw),
+                      "area_budget": float(self.space.area_budget)},
+            "workers": self.workers,
+        }
+
+    @classmethod
+    def from_spec(cls, spec: Dict, *, workers: Optional[int] = None,
+                  executor: Optional[ParallelExecutor] = None) -> "Study":
+        """Rebuild a Study from a `_spec_record` (checkpoint `study` key).
+        `workers` overrides the recorded hint (execution detail only —
+        results are invariant to it)."""
+        sp = spec["space"]
+        space = DesignSpace(
+            domains={k: tuple(int(v) for v in dom)
+                     for k, dom in sp["domains"].items()},
+            hw=HardwareConstants(**sp["hw"]),
+            area_budget=float(sp["area_budget"]))
+        return cls(
+            apps=list(spec["apps"]), space=space,
+            objective=make_objective(spec["objective"]),
+            constraints=[constraint_from_describe(d)
+                         for d in spec.get("constraints", [])],
+            engine=spec["engine"], budget=spec["budget"],
+            seed=int(spec["seed"]), backend=spec["backend"],
+            top_frac=float(spec["top_frac"]),
+            max_candidates_per_app=int(spec["max_candidates_per_app"]),
+            area_budgets=spec.get("area_budgets"),
+            weight_peak_mode=spec["weight_peak_mode"],
+            name=spec["name"],
+            workers=(workers if workers is not None
+                     else int(spec.get("workers", 1))),
+            executor=executor)
+
+    def _encode_result(self, i: int, res: SearchResult) -> Dict:
+        """One per-app SearchResult as a JSON fragment.  Configs are stored
+        as codec index rows (exact integer round-trip); floats survive via
+        repr round-trip, so a decoded result reproduces the original
+        synthesis inputs bit-for-bit."""
+        codec = self._codec()
+        return {
+            "name": self.specs[i].name,
+            "best": _cfg_dict(res.best),
+            "best_perf": float(res.best_perf),
+            "engine": res.engine,
+            "rounds": int(res.rounds),
+            "evaluated": (codec.encode(res.evaluated).tolist()
+                          if res.evaluated else []),
+            "evaluated_perf": np.asarray(res.evaluated_perf,
+                                         dtype=np.float64).tolist(),
+            "evaluated_values": (res.evaluated_values.tolist()
+                                 if res.evaluated_values is not None
+                                 else None),
+            "history": [[_cfg_dict(c), float(p)] for c, p in res.history],
+        }
+
+    def _decode_result(self, i: int, rec: Dict) -> SearchResult:
+        codec = self._codec()
+        idx = np.asarray(rec.get("evaluated", []), dtype=np.int64)
+        evaluated = (codec.decode(idx.reshape(-1, codec.n_vars))
+                     if idx.size else [])
+        values = rec.get("evaluated_values")
+        return SearchResult(
+            best=_cfg_load(rec.get("best")),
+            best_perf=float(rec["best_perf"]),
+            history=[(_cfg_load(c), float(p))
+                     for c, p in rec.get("history", [])],
+            evaluated=evaluated,
+            evaluated_perf=np.asarray(rec["evaluated_perf"],
+                                      dtype=np.float64),
+            rounds=int(rec["rounds"]), engine=rec.get("engine", ""),
+            evaluator=self._make_evaluator(self.specs[i]),
+            evaluated_values=(np.asarray(values, dtype=np.float64)
+                              if values is not None else None))
+
+    def _write_checkpoint(self, path, results: Dict[int, SearchResult]
+                          ) -> None:
+        """Atomically (tmp + rename) rewrite the progress record: a crash
+        mid-write never corrupts an existing checkpoint."""
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        rec = {
+            "version": 1,
+            "kind": "study-checkpoint",
+            "study": self._spec_record(),
+            "checkpoint_every": int(getattr(self, "_ckpt_every", 1)),
+            "completed": {str(i): self._encode_result(i, results[i])
+                          for i in sorted(results)},
+        }
+        tmp = path.with_name(path.name + ".tmp")
+        tmp.write_text(json.dumps(rec))
+        os.replace(tmp, path)
+
+    @classmethod
+    def resume(cls, path, *, workers: Optional[int] = None,
+               executor: Optional[ParallelExecutor] = None,
+               checkpoint_every: Optional[int] = None,
+               on_checkpoint: Optional[Any] = None) -> StudyResult:
+        """Continue a killed study from its checkpoint and return the final
+        `StudyResult` — bit-identical (JSON-serialized) to what the
+        uninterrupted run would have produced, because completed per-app
+        fragments round-trip exactly and the remaining searches rerun from
+        their canonical seeds.  The checkpoint file is removed on
+        success."""
+        rec = json.loads(Path(path).read_text())
+        if rec.get("kind") != "study-checkpoint":
+            raise ValueError(f"{path} is not a study checkpoint")
+        study = cls.from_spec(rec["study"], workers=workers,
+                              executor=executor)
+        study._resume_state = {
+            int(i): study._decode_result(int(i), frag)
+            for i, frag in rec.get("completed", {}).items()}
+        every = (checkpoint_every if checkpoint_every is not None
+                 else int(rec.get("checkpoint_every", 1)))
+        return study.run(checkpoint_path=path, checkpoint_every=every,
+                         on_checkpoint=on_checkpoint)
+
     # --------------------------------------------- §5.1 geomean selection
     def _candidates_of(self, res: SearchResult) -> List[Any]:
         """Top-`top_frac` candidate selection, verbatim from the historical
@@ -450,12 +717,26 @@ class Study:
         wholesale — selection-time metrics offer `area` (a constraint that
         reads `perf` is per-app by construction and belongs in the
         evaluator, not here).  With the default constraints this is
-        byte-identical to the historical `run_multiapp_study` step 3."""
+        byte-identical to the historical `run_multiapp_study` step 3.
+
+        With `workers > 1` and at least `cross_eval_shard_min` candidates
+        the columns fan out over the process pool (`_cross_eval_task`);
+        contiguous order-preserving shards concatenate back to exactly the
+        serial matrix (the cost model is column-wise independent)."""
         batch = ConfigBatch.from_configs(list(cands))
+        apps = [(s.stream,) + self._peaks_for(s) for s in self.specs]
+        if (self.workers > 1 or self.executor is not None) \
+                and len(batch) >= self.cross_eval_shard_min:
+            ex = self._executor()
+            shards = shard_rows(len(batch), ex.workers)
+            payloads = [{"batch": batch.take(rows), "hw": self.space.hw,
+                         "apps": apps, "constraints": tuple(self._extra)}
+                        for rows in shards]
+            parts = ex.map(_cross_eval_task, payloads)
+            return np.concatenate(parts, axis=1)
         cross = np.zeros((len(self.specs), len(batch)))
-        for i, spec in enumerate(self.specs):
-            pw, pi = self._peaks_for(spec)
-            cross[i] = performance_gops(batch, spec.stream, self.space.hw,
+        for i, (stream, pw, pi) in enumerate(apps):
+            cross[i] = performance_gops(batch, stream, self.space.hw,
                                         pw, pi)
         if self._extra:
             metrics = {"area": area_many(batch, self.space.hw)}
@@ -566,7 +847,10 @@ class Study:
         valid = (cross > 0).all(axis=0)
         score = np.where(valid, geomean(cross, axis=0), 0.0)
 
-        front_idx = pareto_front_indices(score, areas)
+        # canonical (content-tie-broken) sweep: the joint front is invariant
+        # to candidate arrival order, hence to worker count / shard order
+        keys = [tuple(sorted(c.asdict().items())) for c in cands]
+        front_idx = canonical_front_indices(score, areas, keys)
         front = [FrontPoint(config=cands[i], score=float(score[i]),
                             area=float(areas[i]),
                             per_app={a: float(cross[k, i])

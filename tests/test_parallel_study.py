@@ -1,0 +1,275 @@
+"""Parallel, resumable Study execution (repro.dse.parallel): checkpoint /
+resume bit-equivalence across engines and crash points, worker fault
+tolerance (retry + serial degradation), and determinism of every parallel
+reduce (worker count, shard order, sharded cross-eval)."""
+
+import json
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.multiapp import AppSpec
+from repro.core.space import default_space
+from repro.dse import (FaultPlan, GeomeanAcrossApps, MaxPerf,
+                       ParallelExecutionWarning, ParallelExecutor,
+                       ParetoObjective, SearchBudget, Study,
+                       canonical_front_indices, merge_pareto_fronts)
+from test_dse_study import GOLD_MA_GEOMEANS, GOLD_MA_SELECTED, GOLD_MULTI, \
+    GOLD_MULTI_PERF
+
+SMALL = dict(apps=["ptb", "wdl"], engine="greedy",
+             budget=SearchBudget(k=2, restarts=1, max_rounds=3), seed=0)
+
+
+def result_bytes(result) -> str:
+    return json.dumps(result.to_json(), sort_keys=True)
+
+
+def run_study(**overrides) -> str:
+    kw = dict(SMALL)
+    kw.update(overrides)
+    return result_bytes(Study(**kw).run())
+
+
+class Crash(Exception):
+    pass
+
+
+# ------------------------------------------------ resume bit-equivalence
+
+ENGINE_BUDGETS = {
+    "greedy": SearchBudget(k=2, restarts=1, max_rounds=3),
+    "anneal": SearchBudget(restarts=1, max_rounds=4,
+                           engine_kwargs={"chains": 3}),
+    "genetic": SearchBudget(restarts=1, max_rounds=4,
+                            engine_kwargs={"population": 12}),
+    "random": SearchBudget(restarts=1, max_rounds=3,
+                           engine_kwargs={"batch": 12}),
+}
+
+
+@pytest.mark.parametrize("engine", sorted(ENGINE_BUDGETS))
+def test_resume_is_bit_identical_at_every_boundary(engine, tmp_path):
+    """Kill the study right after each checkpoint write; `Study.resume`
+    must produce JSON byte-identical to the uninterrupted run — for every
+    engine and every crash point (including after the final per-app
+    search, i.e. before synthesis)."""
+    kw = dict(apps=["ptb", "wdl"], engine=engine,
+              budget=ENGINE_BUDGETS[engine], seed=0)
+    baseline = result_bytes(Study(**kw).run())
+
+    for boundary in (1, 2):
+        ckpt = tmp_path / f"{engine}.{boundary}.ckpt"
+
+        def boom(n, stop=boundary):
+            if n == stop:
+                raise Crash
+
+        with pytest.raises(Crash):
+            Study(**kw).run(checkpoint_path=ckpt, checkpoint_every=1,
+                            on_checkpoint=boom)
+        assert ckpt.exists(), "crash must leave the checkpoint behind"
+        frag = json.loads(ckpt.read_text())
+        assert frag["kind"] == "study-checkpoint"
+        assert len(frag["completed"]) == boundary
+
+        resumed = Study.resume(ckpt)
+        assert result_bytes(resumed) == baseline
+        assert not ckpt.exists(), "checkpoint must be removed on success"
+
+
+def test_resume_under_parallel_workers(tmp_path):
+    """Crash a parallel run, resume with a different worker count: still
+    byte-identical (execution knobs are not part of the problem)."""
+    baseline = run_study()
+    ckpt = tmp_path / "par.ckpt"
+
+    def boom(n):
+        if n == 1:
+            raise Crash
+
+    with pytest.raises(Crash):
+        Study(workers=2, **SMALL).run(checkpoint_path=ckpt,
+                                      checkpoint_every=1, on_checkpoint=boom)
+    assert result_bytes(Study.resume(ckpt, workers=1)) == baseline
+
+
+def test_checkpoint_requires_rebuildable_spec(tmp_path):
+    """AppSpec objects / engine factories cannot round-trip through JSON:
+    checkpointing fails fast, before any search runs."""
+    spec = AppSpec.from_app("ptb")
+    study = Study(apps=[spec], objective=MaxPerf(),
+                  budget=SearchBudget(restarts=1, max_rounds=2))
+    with pytest.raises(ValueError, match="AppSpec"):
+        study.run(checkpoint_path=tmp_path / "x.ckpt")
+    assert not (tmp_path / "x.ckpt").exists()
+
+    with pytest.raises(ValueError, match="not a study checkpoint"):
+        p = tmp_path / "junk.json"
+        p.write_text("{}")
+        Study.resume(p)
+
+
+def test_generic_mode_rejects_checkpointing(tmp_path):
+    from repro.core.search import DiscreteSpace, FunctionEvaluator
+    space = DiscreteSpace(domains={"x": (1, 2, 4)},
+                          make_config=lambda **kw: kw["x"])
+    study = Study(space=space, evaluator=FunctionEvaluator(float),
+                  budget=SearchBudget(restarts=1, max_rounds=2))
+    with pytest.raises(ValueError, match="checkpoint"):
+        study.run(checkpoint_path=tmp_path / "x.ckpt")
+
+
+# ------------------------------------------------------- fault tolerance
+
+def test_worker_raise_retries_then_succeeds(tmp_path):
+    """One injected worker raise: the retry round recovers, no
+    degradation, result identical to serial."""
+    baseline = run_study()
+    ex = ParallelExecutor(workers=2,
+                          fault=FaultPlan(state_dir=str(tmp_path / "f1"),
+                                          mode="raise", times=1))
+    got = run_study(executor=ex)
+    assert got == baseline
+    assert ex.retry_rounds >= 1
+    assert not ex.degraded
+
+
+def test_worker_kill_breaks_pool_then_recovers(tmp_path):
+    """A SIGKILLed worker poisons the whole pool (BrokenProcessPool); a
+    fresh retry pool must finish the study with the exact serial result."""
+    baseline = run_study()
+    ex = ParallelExecutor(workers=2,
+                          fault=FaultPlan(state_dir=str(tmp_path / "f2"),
+                                          mode="kill", times=1,
+                                          task_index=0))
+    got = run_study(executor=ex)
+    assert got == baseline
+    assert ex.retry_rounds >= 1
+    assert not ex.degraded
+
+
+def test_persistent_faults_degrade_to_serial_with_warning(tmp_path):
+    """When every pool round fails, the study falls back to in-process
+    serial execution, warns, and still returns the correct result."""
+    baseline = run_study()
+    ex = ParallelExecutor(workers=2, max_retries=1,
+                          fault=FaultPlan(state_dir=str(tmp_path / "f3"),
+                                          mode="raise", times=999))
+    with pytest.warns(ParallelExecutionWarning, match="serial"):
+        got = run_study(executor=ex)
+    assert got == baseline
+    assert ex.degraded
+
+
+# ---------------------------------------------------------- determinism
+
+def test_worker_count_invariance_pareto():
+    """A Pareto study — front, budget selections, meta — is byte-identical
+    across workers 1, 2, 4."""
+    kw = dict(apps=["ptb", "wdl"], engine="genetic",
+              objective=ParetoObjective(["perf", "-area"]),
+              budget=SearchBudget(restarts=1, max_rounds=4,
+                                  engine_kwargs={"population": 16}),
+              area_budgets=(30000.0, 60000.0, 90000.0), seed=0)
+    outs = {w: result_bytes(Study(workers=w, **kw).run()) for w in (1, 2, 4)}
+    assert outs[1] == outs[2] == outs[4]
+
+
+def test_parallel_reproduces_greedy_goldens():
+    """The seed-commit greedy golden survives the process pool bit-for-bit
+    (worker-side evaluator shards change nothing)."""
+    res = Study(apps=["resnet"], objective=MaxPerf(), engine="greedy",
+                budget=SearchBudget(k=2, restarts=2, max_rounds=6),
+                seed=0, workers=2).run()
+    assert {k: int(v) for k, v in res.best.asdict().items()} == GOLD_MULTI
+    assert res.best_score == GOLD_MULTI_PERF
+
+
+def test_parallel_reproduces_table4_selections():
+    """§5.1 geomean selection (Table-4 golden) at workers=2, with the
+    sharded cross-eval stage forced on: byte-identical selections."""
+    study = Study(apps=["ptb", "wdl"], objective=GeomeanAcrossApps(),
+                  engine="greedy",
+                  budget=SearchBudget(k=2, restarts=2, max_rounds=6),
+                  seed=0, workers=2)
+    study.cross_eval_shard_min = 1         # force the fan-out path
+    res = study.run()
+    assert {k: int(v)
+            for k, v in res.best.asdict().items()} == GOLD_MA_SELECTED
+    assert res.multiapp_summary["geomeans"] == GOLD_MA_GEOMEANS
+
+
+def test_sharded_cross_eval_matches_serial():
+    """The sharded [n_apps, n_cands] cross-evaluation concatenates back to
+    exactly the serial matrix."""
+    space = default_space()
+    specs = [AppSpec.from_app(n) for n in ("ptb", "wdl")]
+    rng = np.random.default_rng(0)
+    cands = [space.sample(rng) for _ in range(37)]
+    serial = Study(apps=specs, space=space)._cross_eval(cands)
+    par = Study(apps=specs, space=space, workers=3)
+    par.cross_eval_shard_min = 1
+    np.testing.assert_array_equal(par._cross_eval(cands), serial)
+
+
+def test_merge_pareto_fronts_is_order_invariant():
+    """Shard fronts merged in any arrival order / shard split produce one
+    identical global front."""
+    space = default_space()
+    rng = np.random.default_rng(7)
+    pool = [space.sample(rng) for _ in range(60)]
+    perf = rng.uniform(10.0, 1000.0, len(pool))
+    area = np.asarray([c.area(space.hw) for c in pool])
+    entries = list(zip(pool, perf, area))
+
+    def split(n_shards, seed):
+        shuffled = entries[:]
+        random.Random(seed).shuffle(shuffled)
+        return [shuffled[i::n_shards] for i in range(n_shards)]
+
+    ref = merge_pareto_fronts([entries])
+    assert ref, "test front must be non-empty"
+    for n_shards, seed in ((2, 0), (3, 1), (5, 2)):
+        got = merge_pareto_fronts(split(n_shards, seed))
+        assert [(e[1], e[2]) for e in got] == [(e[1], e[2]) for e in ref]
+        assert [e[0].asdict() for e in got] == [e[0].asdict() for e in ref]
+
+    # duplicated entries across shards dedupe; conflicting metrics for one
+    # config are a loud error, never a silent pick
+    assert merge_pareto_fronts([entries, entries]) == ref
+    bad = [(pool[0], float(perf[0]) + 1.0, float(area[0]))]
+    with pytest.raises(ValueError, match="conflicting"):
+        merge_pareto_fronts([entries, bad])
+
+
+def test_canonical_front_ties_break_by_content():
+    """Metric-tied points resolve by config key, not input order."""
+    perf = np.asarray([5.0, 5.0, 3.0, 0.0])
+    area = np.asarray([10.0, 10.0, 4.0, 1.0])
+    keys = ["b", "a", "c", "d"]
+    assert canonical_front_indices(perf, area, keys) == [2, 1]
+    rev = canonical_front_indices(perf[::-1].copy(), area[::-1].copy(),
+                                  keys[::-1])
+    assert rev == [1, 2]                   # same points under the reversal
+
+
+# ------------------------------------------------------- executor (unit)
+
+def _double(x):
+    return 2 * x
+
+
+def test_executor_map_orders_and_streams():
+    ex = ParallelExecutor(workers=1)
+    seen = []
+    out = ex.map(_double, [3, 1, 2], on_result=lambda i, r: seen.append(i))
+    assert out == [6, 2, 4]
+    assert seen == [0, 1, 2]
+
+
+def test_executor_pool_map_matches_serial():
+    ex = ParallelExecutor(workers=2)
+    assert ex.map(_double, list(range(8))) == [2 * i for i in range(8)]
+    assert not ex.degraded
