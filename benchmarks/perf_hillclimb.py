@@ -174,7 +174,8 @@ def _resolve_apps(app_args) -> tuple:
 
 
 def run_shootout(app_names: tuple = SMOKE_APPS,
-                 engines: tuple = ("greedy", "anneal", "genetic", "random"),
+                 engines: tuple = ("greedy", "anneal", "genetic", "random",
+                                   "tpe", "nsga2"),
                  budget: int = 512, seed: int = 0,
                  verbose: bool = True,
                  max_rounds: int = 0,
@@ -272,7 +273,7 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--engine", action="append", default=None,
                     help="search engine(s) to run (repeatable); "
-                         "default: greedy (full) / all four (smoke)")
+                         "default: greedy (full) / all six (smoke)")
     ap.add_argument("--max-rounds", type=int, default=None,
                     help="search rounds per engine (both modes; in --smoke "
                          "it bounds rounds on top of --budget)")
@@ -295,7 +296,8 @@ if __name__ == "__main__":
     args = ap.parse_args()
     if args.smoke:
         engines = tuple(args.engine
-                        or ["greedy", "anneal", "genetic", "random"])
+                        or ["greedy", "anneal", "genetic", "random",
+                            "tpe", "nsga2"])
         run_shootout(_resolve_apps(args.apps or list(SMOKE_APPS)), engines,
                      budget=args.budget, max_rounds=args.max_rounds or 0,
                      backend=args.backend,

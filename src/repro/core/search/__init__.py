@@ -64,6 +64,15 @@ Engines
               mutation, elitism; population kept as a struct-of-arrays
               index matrix (`SpaceCodec`).
 ``random``    Uniform random draws (validity-repaired) — the baseline.
+``tpe``       Tree-structured Parzen Estimator: per-dimension smoothed
+              categorical densities over the codec index columns, good/
+              bad split at the `gamma` quantile, batched candidates
+              ranked by EI ratio — the surrogate-guided engine for
+              expensive evaluators.
+``nsga2``     NSGA-II: fast non-dominated sort + crowding distance over
+              the raw [N, M] objective rows (constraint-domination via
+              the feasibility mask), (mu + lambda) elitism, offspring
+              repaired in bulk — the native multi-objective engine.
 ============  ==========================================================
 
 Multi-objective mode
@@ -92,22 +101,26 @@ import numpy as np
 from repro.core.costmodel import ConfigBatch
 from repro.core.search.base import (DiscreteSpace, Optimizer, ParetoPoint,
                                     SearchResult, SpaceCodec,
-                                    pareto_front_indices, repair_many_with,
-                                    repair_with, run_search)
+                                    pack_config, pareto_front_indices,
+                                    repair_many_with, repair_with,
+                                    run_search, unpack_config)
 from repro.core.search.evaluator import (Evaluator, FunctionEvaluator,
                                          config_key)
 from repro.core.search.greedy import GreedyOptimizer
 from repro.core.search.anneal import AnnealOptimizer
 from repro.core.search.genetic import GeneticOptimizer
 from repro.core.search.random_search import RandomSearchOptimizer
+from repro.core.search.tpe import TPEOptimizer
+from repro.core.search.nsga2 import NSGA2Optimizer
 
 __all__ = [
     "Optimizer", "SearchResult", "ParetoPoint", "run_search",
     "SpaceCodec", "DiscreteSpace", "pareto_front_indices",
     "ConfigBatch", "repair_with", "repair_many_with",
+    "pack_config", "unpack_config",
     "Evaluator", "FunctionEvaluator", "config_key",
     "GreedyOptimizer", "AnnealOptimizer", "GeneticOptimizer",
-    "RandomSearchOptimizer",
+    "RandomSearchOptimizer", "TPEOptimizer", "NSGA2Optimizer",
     "ENGINES", "EngineSpec", "filter_kwargs", "make_engine",
     "optimize_for_app", "multi_step_greedy",
 ]
@@ -117,6 +130,8 @@ ENGINES: Dict[str, type] = {
     "anneal": AnnealOptimizer,
     "genetic": GeneticOptimizer,
     "random": RandomSearchOptimizer,
+    "tpe": TPEOptimizer,
+    "nsga2": NSGA2Optimizer,
 }
 
 EngineSpec = Union[str, Callable[..., Optimizer]]

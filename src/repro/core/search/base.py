@@ -28,7 +28,8 @@ from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple)
 import numpy as np
 
 __all__ = ["Optimizer", "SearchResult", "ParetoPoint", "run_search",
-           "SpaceCodec", "DiscreteSpace", "pareto_front_indices"]
+           "SpaceCodec", "DiscreteSpace", "pareto_front_indices",
+           "pack_config", "unpack_config"]
 
 
 # --------------------------------------------------------------------------
@@ -208,6 +209,16 @@ def codec_for(space: Any) -> SpaceCodec:
     if fn is not None:
         return fn()
     raise TypeError(f"space {type(space).__name__} has no codec()")
+
+
+def pack_config(codec: SpaceCodec, cfg: Any) -> List[int]:
+    """Config -> JSON-able domain-index row (for engine `state_dict`)."""
+    return [int(x) for x in codec.encode([cfg])[0]]
+
+
+def unpack_config(codec: SpaceCodec, row: Sequence[int]) -> Any:
+    """Inverse of `pack_config` (exact integer round-trip)."""
+    return codec.decode(np.asarray([row], dtype=np.int64))[0]
 
 
 def _constraint_repairs(evaluator: Any, batch: Any, space: Any) -> Any:
@@ -401,6 +412,11 @@ class Optimizer(abc.ABC):
     """
 
     name: str = "engine"
+    #: engines that consume the full [N, M] objective-value matrix in
+    #: `observe` (NSGA-II non-dominated sorting) set this True; the driver
+    #: then hands them the raw rows while still logging the scalarized
+    #: signal for `SearchResult.evaluated_perf`
+    observes_vector: bool = False
 
     def __init__(self) -> None:
         self.best: Any = None
@@ -412,13 +428,35 @@ class Optimizer(abc.ABC):
         self.scalarizer: Optional[Callable[[np.ndarray], np.ndarray]] = None
 
     def _scalar(self, scores) -> np.ndarray:
-        """Reduce evaluator output to the [N] vector engines optimize."""
+        """Reduce evaluator output to the [N] vector engines optimize.
+
+        Non-finite entries (NaN from a crashed measurement, inf from a
+        degenerate model) become -inf: an invalid evaluation must never win
+        the incumbent slot or poison a comparison chain, and -inf keeps
+        every engine's ordering logic (argmax, Metropolis accept, quantile
+        splits) well-defined where NaN would not."""
         scores = np.asarray(scores, dtype=np.float64)
-        if scores.ndim == 1:
-            return scores
-        if self.scalarizer is not None:
-            return np.asarray(self.scalarizer(scores), dtype=np.float64)
-        return scores[:, 0]
+        if scores.ndim != 1:
+            if self.scalarizer is not None:
+                scores = np.asarray(self.scalarizer(scores),
+                                    dtype=np.float64)
+            else:
+                scores = scores[:, 0]
+        return np.where(np.isfinite(scores), scores, -np.inf)
+
+    # --------------------------------------------- optional state round-trip
+    def state_dict(self) -> Dict:
+        """JSON-able snapshot of the engine's search state, taken at a
+        round boundary (after `observe`, before the next `propose`).
+        Engines that support mid-study checkpointing (tpe, nsga2) override
+        both hooks; `load_state` into a freshly constructed engine must
+        continue bit-identically to the uninterrupted run."""
+        raise NotImplementedError(
+            f"engine {self.name!r} does not serialize search state")
+
+    def load_state(self, state: Dict) -> None:
+        raise NotImplementedError(
+            f"engine {self.name!r} does not serialize search state")
 
     @abc.abstractmethod
     def propose(self) -> List[Any]:
@@ -451,9 +489,11 @@ def run_search(engine: Optimizer, evaluator) -> SearchResult:
 
     When the evaluator returns an [N, M] objective-value matrix (vector
     objective), the driver scalarizes ONCE through the engine's hook —
-    the engine then observes plain scalars (its `_scalar` is the identity
-    on 1-D input, so the stateful scalarizer is not applied twice) — and
-    the full rows are kept in `SearchResult.evaluated_values`."""
+    scalar engines then observe plain scalars (their `_scalar` is finite-
+    identity on 1-D input, so the stateful scalarizer is not applied
+    twice), while engines with `observes_vector` (NSGA-II) receive the raw
+    rows — and the full rows are kept in
+    `SearchResult.evaluated_values`."""
     pools: List[Any] = []
     perf: List[float] = []
     value_rows: List[np.ndarray] = []
@@ -464,10 +504,16 @@ def run_search(engine: Optimizer, evaluator) -> SearchResult:
         scores = np.asarray(evaluator(pool), dtype=np.float64)
         if scores.ndim == 2:
             value_rows.append(scores)
-            scores = engine._scalar(scores)
+            scalar = engine._scalar(scores)
+            # vector-observing engines (NSGA-II) get the raw rows; the
+            # stateful scalarizer was already fed this batch, so the
+            # engine's own `_scalar` call on it is idempotent
+            observed = scores if engine.observes_vector else scalar
+        else:
+            scalar = observed = scores
         pools.append(pool)
-        perf.extend(scores.tolist())
-        engine.observe(pool, scores)
+        perf.extend(scalar.tolist())
+        engine.observe(pool, observed)
     evaluated: List[Any] = []
     for pool in pools:
         evaluated.extend(pool.to_configs() if hasattr(pool, "to_configs")

@@ -71,7 +71,8 @@ def build_parser() -> argparse.ArgumentParser:
                          "build_app name incl. '<arch>:prefill' / "
                          "'<arch>:decode' zoo workloads  [default: resnet]")
     ap.add_argument("--engine", default="greedy",
-                    help="search engine: greedy | anneal | genetic | random")
+                    help="search engine: greedy | anneal | genetic | "
+                         "random | tpe | nsga2")
     ap.add_argument("--objective", default=None,
                     choices=sorted(OBJECTIVES),
                     help="optimization objective  [default: maxperf for one "

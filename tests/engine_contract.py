@@ -1,0 +1,174 @@
+"""Shared engine-contract harness: the checks EVERY search engine must pass.
+
+The ask/tell `Optimizer` contract (repro.core.search.base) is what lets
+Study, the CLI, the shoot-out, and the parallel execution layer treat all
+six engines interchangeably — so the contract is pinned here ONCE and
+parametrized over the full registry instead of re-asserted ad hoc per
+engine.  `tests/test_search_engines.py` wires this module into pytest;
+keeping the harness in a non-`test_`-prefixed module lets other suites
+(e.g. a future engine in a downstream repo) import and reuse the checks.
+
+Checks, each a `check_*(engine_name, make_engine_fn)` callable:
+
+  budget       — the engine never runs past `max_rounds` round starts and
+                 never proposes an unreasonably oversized pool.
+  valid_pool   — every proposed config encodes through the space codec
+                 (i.e. every field value is a domain member) and, for the
+                 accelerator space, respects the Eq. 11/13 repair floors.
+  nan_observe  — observing NaN/inf scores must not poison engine state:
+                 the incumbent stays finite-or-unset, later rounds still
+                 propose, and `done` still terminates the loop.
+  terminates   — the driver loop ends in bounded rounds.
+  reproducible — two engines with the same seed produce bit-identical
+                 proposal streams and the same incumbent.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.search import ENGINES, make_engine
+
+__all__ = ["ALL_ENGINES", "CONTRACT_CHECKS", "run_contract_check"]
+
+ALL_ENGINES = tuple(sorted(ENGINES))
+
+# modest budgets so the whole (engine x check) matrix stays fast; every
+# engine understands the union via make_engine's kwarg filtering
+CONTRACT_KW = {"k": 1, "max_rounds": 4, "batch": 8, "population": 8,
+               "chains": 4, "patience": 2, "startup_rounds": 1}
+
+# generous per-round pool ceiling: greedy proposes k * sum(|domain|) - ish
+# neighborhoods, population engines propose their population/batch
+MAX_POOL = 20000
+
+
+def _pool_list(pool):
+    return pool.to_configs() if hasattr(pool, "to_configs") else list(pool)
+
+
+def check_budget(name, fresh):
+    """Round accounting: at most `max_rounds` observe cycles, pools bounded."""
+    eng, ev, space = fresh(seed=0)
+    rounds = 0
+    while not eng.done:
+        pool = eng.propose()
+        if pool is None or len(pool) == 0:
+            break
+        assert len(pool) <= MAX_POOL, \
+            f"{name}: proposed {len(pool)} configs in one round"
+        eng.observe(pool, ev(pool))
+        rounds += 1
+        assert rounds <= CONTRACT_KW["max_rounds"] + 1, \
+            f"{name}: ran {rounds} rounds past max_rounds=" \
+            f"{CONTRACT_KW['max_rounds']}"
+    assert eng.rounds <= CONTRACT_KW["max_rounds"] + 1
+
+
+def check_valid_pool(name, fresh):
+    """Every proposed config must encode through the codec — field values
+    are domain members — and carry positive buffer/compute fields."""
+    from repro.core.search.base import codec_for
+
+    eng, ev, space = fresh(seed=1)
+    codec = codec_for(space)
+    saw = 0
+    while not eng.done:
+        pool = eng.propose()
+        if pool is None or len(pool) == 0:
+            break
+        cfgs = _pool_list(pool)
+        idx = codec.encode(cfgs)        # raises KeyError on non-members
+        assert idx.shape == (len(cfgs), codec.n_vars)
+        assert (idx >= 0).all() and (idx < codec.sizes[None, :]).all()
+        saw += len(cfgs)
+        eng.observe(pool, ev(pool))
+    assert saw > 0, f"{name}: never proposed a config"
+
+
+def check_nan_observe(name, fresh):
+    """A crashed measurement (NaN) or degenerate model output (inf) must
+    not poison the incumbent or stop the engine from proposing."""
+    eng, ev, space = fresh(seed=2)
+    pool = eng.propose()
+    assert pool is not None and len(pool) > 0
+    bad = np.full(len(pool), np.nan)
+    bad[: len(bad) // 2] = np.inf
+    eng.observe(pool, bad)
+    # the incumbent may still be unset (None / -inf sentinel) but must
+    # never be NaN — NaN breaks every later `>` comparison silently
+    assert not np.isnan(eng.best_perf), \
+        f"{name}: NaN incumbent after NaN observe"
+    # the engine keeps working on real scores afterwards
+    rounds = 0
+    while not eng.done and rounds < CONTRACT_KW["max_rounds"] + 1:
+        pool = eng.propose()
+        if pool is None or len(pool) == 0:
+            break
+        eng.observe(pool, ev(pool))
+        rounds += 1
+    # real scores arrived after the poisoned round: a finite incumbent
+    # must have been recovered
+    assert np.isfinite(eng.best_perf), \
+        f"{name}: incumbent {eng.best_perf} never recovered after NaN round"
+    assert eng.best_perf >= 0
+
+
+def check_terminates(name, fresh):
+    """`done` flips within a bounded number of driver iterations."""
+    eng, ev, space = fresh(seed=3)
+    for _ in range(CONTRACT_KW["max_rounds"] + 2):
+        if eng.done:
+            break
+        pool = eng.propose()
+        if pool is None or len(pool) == 0:
+            break
+        eng.observe(pool, ev(pool))
+    else:
+        raise AssertionError(f"{name}: loop did not terminate within "
+                             f"max_rounds + 2 iterations")
+
+
+def check_reproducible(name, fresh):
+    """Same seed -> bit-identical proposal stream and incumbent."""
+    def trace(seed):
+        eng, ev, space = fresh(seed=seed)
+        pools, scores = [], []
+        while not eng.done:
+            pool = eng.propose()
+            if pool is None or len(pool) == 0:
+                break
+            sc = ev(pool)
+            pools.append([c.asdict() for c in _pool_list(pool)])
+            scores.append(np.asarray(sc).tolist())
+            eng.observe(pool, sc)
+        best = eng.best.asdict() if eng.best is not None else None
+        return pools, scores, best, float(eng.best_perf)
+
+    a = trace(7)
+    b = trace(7)
+    assert a == b, f"{name}: seeded run is not reproducible"
+
+
+CONTRACT_CHECKS = {
+    "budget": check_budget,
+    "valid_pool": check_valid_pool,
+    "nan_observe": check_nan_observe,
+    "terminates": check_terminates,
+    "reproducible": check_reproducible,
+}
+
+
+def run_contract_check(check: str, engine: str, space, evaluator_factory):
+    """Run one named check against one engine.
+
+    `evaluator_factory()` must return a FRESH evaluator per call (engines
+    sharing one memoizing evaluator would let a later engine see cache
+    state the check did not create)."""
+
+    def fresh(seed):
+        ev = evaluator_factory()
+        eng = make_engine(engine, space, ev, seed=seed, **CONTRACT_KW)
+        return eng, ev, space
+
+    CONTRACT_CHECKS[check](engine, fresh)

@@ -1,0 +1,22 @@
+"""Closed-form multi-objective search problems for engine tests.
+
+Thin re-export of `repro.core.search.synthetic` under the name the test
+suites import: three problems on the power-of-two grid whose optima and
+Pareto fronts are known exactly (exhaustive enumeration), plus the
+memoizing evaluator and the 2-D hypervolume helper.  See the source
+module for the problem definitions and their intent; `PROBLEM_NAMES` is
+the canonical parametrization order.
+"""
+
+from __future__ import annotations
+
+from repro.core.search.synthetic import (GridConfig, PROBLEMS,
+                                         SyntheticEvaluator,
+                                         SyntheticProblem, hypervolume_2d,
+                                         make_problem, problem_truth)
+
+__all__ = ["GridConfig", "PROBLEMS", "PROBLEM_NAMES", "SyntheticEvaluator",
+           "SyntheticProblem", "hypervolume_2d", "make_problem",
+           "problem_truth"]
+
+PROBLEM_NAMES = tuple(PROBLEMS)

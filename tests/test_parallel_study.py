@@ -46,6 +46,10 @@ ENGINE_BUDGETS = {
                             engine_kwargs={"population": 12}),
     "random": SearchBudget(restarts=1, max_rounds=3,
                            engine_kwargs={"batch": 12}),
+    "tpe": SearchBudget(restarts=1, max_rounds=4,
+                        engine_kwargs={"batch": 12, "startup_rounds": 1}),
+    "nsga2": SearchBudget(restarts=1, max_rounds=4,
+                          engine_kwargs={"population": 12}),
 }
 
 
@@ -121,6 +125,62 @@ def test_generic_mode_rejects_checkpointing(tmp_path):
         study.run(checkpoint_path=tmp_path / "x.ckpt")
 
 
+def test_nsga2_mid_generation_checkpoint_boundary(tmp_path):
+    """Engine-level checkpointing for NSGA-II on the accelerator space:
+    snapshot the generation state mid-run (a round boundary inside the
+    generational loop — between Study's per-app checkpoints, which only
+    fall at app completion), push it through the JSON wire format, and the
+    restored engine must continue bit-identically to the uninterrupted
+    run."""
+    from repro.core.search import Evaluator, NSGA2Optimizer
+
+    spec = AppSpec.from_app("ptb")
+    space = default_space()
+
+    def fresh_ev():
+        return Evaluator.for_space(spec.stream, space,
+                                   peak_weight_bits=spec.peak_weight_bits,
+                                   peak_input_bits=spec.peak_input_bits)
+
+    def fresh_eng(ev):
+        return NSGA2Optimizer(space, ev, seed=0, population=12,
+                              max_rounds=5)
+
+    def pool_dicts(pool):
+        cfgs = pool.to_configs() if hasattr(pool, "to_configs") else pool
+        return [c.asdict() for c in cfgs]
+
+    ev_ref = fresh_ev()
+    ref = fresh_eng(ev_ref)
+    ref_pools = []
+    while not ref.done:
+        pool = ref.propose()
+        ref_pools.append(pool_dicts(pool))
+        ref.observe(pool, ev_ref(pool))
+
+    ev_half = fresh_ev()
+    half = fresh_eng(ev_half)
+    for _ in range(3):                      # founding gen + 2 generations
+        pool = half.propose()
+        half.observe(pool, ev_half(pool))
+    wire = (tmp_path / "nsga2.state.json")
+    wire.write_text(json.dumps(half.state_dict()))
+
+    ev_cont = fresh_ev()
+    resumed = fresh_eng(ev_cont)
+    resumed.load_state(json.loads(wire.read_text()))
+    assert resumed.rounds == half.rounds
+    assert resumed.best_perf == half.best_perf
+    cont_pools = []
+    while not resumed.done:
+        pool = resumed.propose()
+        cont_pools.append(pool_dicts(pool))
+        resumed.observe(pool, ev_cont(pool))
+    assert cont_pools == ref_pools[3:]
+    assert resumed.best_perf == ref.best_perf
+    assert resumed.best.asdict() == ref.best.asdict()
+
+
 # ------------------------------------------------------- fault tolerance
 
 def test_worker_raise_retries_then_succeeds(tmp_path):
@@ -164,6 +224,17 @@ def test_persistent_faults_degrade_to_serial_with_warning(tmp_path):
 
 
 # ---------------------------------------------------------- determinism
+
+@pytest.mark.parametrize("engine", sorted(ENGINE_BUDGETS))
+def test_worker_count_invariance_all_engines(engine):
+    """StudyResult JSON is byte-identical at workers 1 and 2 for every
+    registered engine (the full six-engine matrix — parallel fan-out is an
+    execution knob, never part of the problem)."""
+    kw = dict(apps=["ptb", "wdl"], engine=engine,
+              budget=ENGINE_BUDGETS[engine], seed=0)
+    outs = {w: result_bytes(Study(workers=w, **kw).run()) for w in (1, 2)}
+    assert outs[1] == outs[2]
+
 
 def test_worker_count_invariance_pareto():
     """A Pareto study — front, budget selections, meta — is byte-identical

@@ -13,6 +13,8 @@ from repro.core.search import (AnnealOptimizer, Evaluator, GeneticOptimizer,
                                run_search)
 from repro.core.space import default_space
 
+from engine_contract import ALL_ENGINES, CONTRACT_CHECKS, run_contract_check
+
 
 @pytest.fixture(scope="module")
 def resnet_spec():
@@ -101,6 +103,20 @@ def test_optimize_for_app_bit_for_bit(resnet_spec, space):
     assert {k: int(v) for k, v in res.best.asdict().items()} == GOLD_MULTI
     assert res.best_perf == GOLD_MULTI_PERF
     assert len(res.evaluated) == 454
+
+
+# ----------------------------------------------------------- engine contract
+
+@pytest.mark.parametrize("engine", ALL_ENGINES)
+@pytest.mark.parametrize("check", sorted(CONTRACT_CHECKS))
+def test_engine_contract(check, engine, resnet_spec, space):
+    """Shared harness (tests/engine_contract.py): budget accounting, pool
+    validity, NaN/inf tolerance, termination, and seed reproducibility —
+    the full (engine x check) matrix over every registered engine."""
+    run_contract_check(
+        check, engine, space,
+        lambda: Evaluator.for_space(resnet_spec.stream, space,
+                                    **_peaks(resnet_spec)))
 
 
 # ------------------------------------------------------------ engine quality

@@ -1,0 +1,289 @@
+"""Surrogate-guided engines (TPE, NSGA-II): convergence bars on the
+closed-form problems, NSGA-II front quality vs. exact truth, and search-
+state serialization round-trips.
+
+The closed-form problems (tests/search_problems.py ->
+repro.core.search.synthetic) make these tests *absolute*: targets come
+from exhaustive enumeration or from a deterministic random-search run,
+never from another stochastic engine, so every bar below is exact and
+seed-stable."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.search import (NSGA2Optimizer, TPEOptimizer, make_engine,
+                               run_search)
+from search_problems import (PROBLEM_NAMES, SyntheticEvaluator,
+                             hypervolume_2d, make_problem, problem_truth)
+
+BUDGET = 256
+STALL = 10
+
+
+def _drive(engine, problem, seed, budget, **kw):
+    """Benchmark-protocol driver: unique-evaluation budget, restart on
+    plateau with the canonical seed+1000*restart reseeding.  Returns
+    (best_perf, perf_rows, area_rows, best_trajectory)."""
+    p = make_problem(problem)
+    ev = SyntheticEvaluator(p)
+    space = p.space()
+    rows_p, rows_a, traj = [], [], []
+    best, restart = -np.inf, 0
+    while ev.n_scored < budget:
+        eng = make_engine(engine, space, ev, seed=seed + 1000 * restart,
+                          max_rounds=10 ** 6, **kw)
+        stall = 0
+        while not eng.done and ev.n_scored < budget and stall < STALL:
+            before = ev.n_scored
+            pool = eng.propose()
+            if pool is None or len(pool) == 0:
+                break
+            perf, area = ev.score_with_area(pool)
+            eng.observe(pool, perf)
+            rows_p.extend(perf.tolist())
+            rows_a.extend(area.tolist())
+            best = max(best, float(eng.best_perf))
+            stall = stall + 1 if ev.n_scored == before else 0
+            traj.append((ev.n_scored, best))
+        restart += 1
+    return best, np.asarray(rows_p), np.asarray(rows_a), traj
+
+
+# ----------------------------------------------------------- problem truth
+
+@pytest.mark.parametrize("problem", PROBLEM_NAMES)
+def test_truth_is_exhaustive_and_nondominated(problem):
+    tr = problem_truth(problem)
+    assert tr["best_perf"] > 0
+    assert tr["hypervolume"] > 0
+    assert 0 < tr["n_feasible"] <= tr["n_total"]
+    fp, fa = tr["front_perf"], tr["front_area"]
+    assert len(fp) == len(fa) > 0
+    assert float(fp.max()) == tr["best_perf"]
+    # pairwise non-domination on the exact front
+    for i in range(len(fp)):
+        dominated = ((fp >= fp[i]) & (fa <= fa[i])
+                     & ((fp > fp[i]) | (fa < fa[i])))
+        assert not dominated.any()
+    # the front's own hypervolume IS the problem hypervolume
+    assert hypervolume_2d(fp, fa, tr["ref_area"]) == tr["hypervolume"]
+
+
+def test_synthetic_evaluator_memoizes_unique_configs():
+    p = make_problem("roofline")
+    ev = SyntheticEvaluator(p)
+    rng = np.random.default_rng(0)
+    space = p.space()
+    pool = [space.sample(rng) for _ in range(20)]
+    first = ev(pool + pool[:5])            # duplicates in one call
+    assert ev.n_scored == 20
+    again = ev(pool + pool[:5])            # pure cache hits
+    np.testing.assert_array_equal(first, again)
+    assert ev.n_scored == 20
+    perf, area = ev.score_with_area(pool)
+    np.testing.assert_array_equal(perf, first[:20])
+    assert ev.n_scored == 20
+    assert (area > 0).all()
+
+
+def test_infeasible_configs_score_zero():
+    from search_problems import GridConfig
+
+    ev = SyntheticEvaluator(make_problem("desert"))
+    # violates bufa >= 16*tb*tk
+    bad = GridConfig(pe=2, mac=2, bufw=64, bufa=1, tb=8, tk=8)
+    good = GridConfig(pe=2, mac=2, bufw=64, bufa=1024, tb=2, tk=2)
+    scores = ev([bad, good])
+    assert scores[0] == 0.0
+    assert scores[1] > 0.0
+    assert not ev.feasible_mask([bad, good], None)[0]
+
+
+# ------------------------------------------------------- convergence bars
+
+@pytest.mark.parametrize("problem", PROBLEM_NAMES)
+def test_tpe_beats_random_at_equal_budget(problem):
+    """TPE must reach random's best-of-budget well before the budget runs
+    out (the BENCH_surrogate gate holds this at <= 0.5 of the budget over
+    three seeds; the single-seed test bar is 0.75 for slack)."""
+    _, _, _, rtraj = _drive("random", problem, 0, BUDGET, batch=16)
+    target = rtraj[-1][1]
+    _, _, _, ttraj = _drive("tpe", problem, 0, BUDGET, batch=16)
+    hit = next((n for n, b in ttraj if b >= target), None)
+    assert hit is not None, f"tpe never matched random on {problem}"
+    assert hit <= 0.75 * BUDGET
+
+
+@pytest.mark.parametrize("problem", PROBLEM_NAMES)
+def test_nsga2_beats_random_at_equal_budget(problem):
+    """NSGA-II matches random's budget-final quality — in at least one of
+    its native readings (best perf, front hypervolume) — at <= 0.75 of
+    the budget."""
+    ref = problem_truth(problem)["ref_area"]
+    _, rp, ra, rtraj = _drive("random", problem, 0, BUDGET, batch=16)
+    best_target = rtraj[-1][1]
+    hv_target = hypervolume_2d(rp, ra, ref)
+    _, np_, na_, ntraj = _drive("nsga2", problem, 0, BUDGET, population=16)
+    hit_best = next((n for n, b in ntraj if b >= best_target), None)
+    # hv trajectory: re-scan the evaluated log at each round boundary
+    hit_hv = None
+    rows = 0
+    for n, _b in ntraj:
+        rows = min(len(np_), rows + 16)
+        if hypervolume_2d(np_[:rows], na_[:rows], ref) >= hv_target:
+            hit_hv = n
+            break
+    hits = [h for h in (hit_best, hit_hv) if h is not None]
+    assert hits, f"nsga2 never matched random on {problem}"
+    assert min(hits) <= 0.75 * BUDGET
+
+
+# measured single-seed floors with margin; ridge's exact front contains
+# many low-area micro-configs a perf-pressured run does not chase, hence
+# the looser bar there
+HV_FRACTION_FLOOR = {"roofline": 0.85, "desert": 0.60, "ridge": 0.20}
+
+
+@pytest.mark.parametrize("problem", PROBLEM_NAMES)
+def test_nsga2_hypervolume_approaches_truth(problem):
+    tr = problem_truth(problem)
+    _, rp, ra, _ = _drive("nsga2", problem, 0, BUDGET, population=16)
+    hv = hypervolume_2d(rp, ra, tr["ref_area"])
+    frac = hv / tr["hypervolume"]
+    assert frac >= HV_FRACTION_FLOOR[problem], \
+        f"{problem}: hv fraction {frac:.3f} below floor"
+    assert frac <= 1.0 + 1e-12             # can never exceed exact truth
+
+
+def test_nsga2_front_is_nondominated_and_feasible():
+    p = make_problem("desert")
+    ev = SyntheticEvaluator(p)
+    eng = make_engine("nsga2", p.space(), ev, seed=0, population=16,
+                      max_rounds=8)
+    res = run_search(eng, ev)
+    assert res.best_perf > 0
+    cfgs = eng.front_configs()
+    assert cfgs, "empty first front"
+    perf, area = ev.score_with_area(cfgs)
+    assert (perf > 0).all(), "infeasible config on the first front"
+    for i in range(len(cfgs)):
+        dominated = ((perf >= perf[i]) & (area <= area[i])
+                     & ((perf > perf[i]) | (area < area[i])))
+        assert not dominated.any()
+
+
+# -------------------------------------------------- state serialization
+
+def _json_roundtrip(state):
+    return json.loads(json.dumps(state))
+
+
+@pytest.mark.parametrize("engine_cls,kw", [
+    (TPEOptimizer, {"batch": 8, "startup_rounds": 1}),
+    (NSGA2Optimizer, {"population": 8}),
+])
+def test_state_roundtrip_continues_bit_identically(engine_cls, kw):
+    """Snapshot at a round boundary, restore into a FRESH engine, and the
+    continuation must match the uninterrupted run byte-for-byte —
+    including through an actual json.dumps/loads (the checkpoint wire
+    format)."""
+    p = make_problem("roofline")
+    space = p.space()
+
+    def fresh():
+        return engine_cls(space, SyntheticEvaluator(p), seed=5,
+                          max_rounds=6, **kw)
+
+    # uninterrupted reference run
+    ref = fresh()
+    ev_ref = SyntheticEvaluator(p)
+    ref_pools = []
+    while not ref.done:
+        pool = ref.propose()
+        ref_pools.append([c.asdict() for c in pool])
+        ref.observe(pool, ev_ref(pool))
+
+    # interrupted at round 3: snapshot -> JSON -> restore -> continue
+    half = fresh()
+    ev_half = SyntheticEvaluator(p)
+    for _ in range(3):
+        pool = half.propose()
+        half.observe(pool, ev_half(pool))
+    state = _json_roundtrip(half.state_dict())
+
+    resumed = fresh()
+    resumed.load_state(state)
+    # NSGA-II's founding generation does not count a round, so compare to
+    # the interrupted engine rather than the observe count
+    assert resumed.rounds == half.rounds
+    assert resumed.best_perf == half.best_perf
+    cont_pools = []
+    ev_cont = SyntheticEvaluator(p)
+    ev_cont(  # warm the continuation evaluator like the original saw
+        [c for pl in ref_pools[:3] for c in
+         [space.make_config(**d) for d in pl]])
+    while not resumed.done:
+        pool = resumed.propose()
+        cont_pools.append([c.asdict() for c in pool])
+        resumed.observe(pool, ev_cont(pool))
+    assert cont_pools == ref_pools[3:]
+    assert resumed.best_perf == ref.best_perf
+    assert (resumed.best.asdict() if resumed.best else None) == \
+        (ref.best.asdict() if ref.best else None)
+
+
+def test_state_roundtrip_rejects_wrong_engine():
+    p = make_problem("roofline")
+    tpe = TPEOptimizer(p.space(), SyntheticEvaluator(p), seed=0, batch=4)
+    pool = tpe.propose()
+    tpe.observe(pool, SyntheticEvaluator(p)(pool))
+    state = tpe.state_dict()
+    nsga = NSGA2Optimizer(p.space(), SyntheticEvaluator(p), seed=0,
+                          population=4)
+    with pytest.raises(ValueError, match="tpe"):
+        nsga.load_state(state)
+
+
+def test_engines_without_state_support_raise():
+    p = make_problem("roofline")
+    eng = make_engine("anneal", p.space(), SyntheticEvaluator(p), seed=0,
+                      chains=2)
+    with pytest.raises(NotImplementedError):
+        eng.state_dict()
+    with pytest.raises(NotImplementedError):
+        eng.load_state({})
+
+
+# --------------------------------------------------------- driver routing
+
+def test_run_search_routes_vector_rows_to_nsga2():
+    """With a vector objective the driver hands NSGA-II the raw [N, M]
+    rows (observes_vector) while the logged `evaluated_perf` stays
+    scalar."""
+
+    class VectorEval:
+        """Minimal evaluator returning [N, 2] rows: (value, -cost)."""
+
+        objective = None
+        constraints = ()
+        hw = None
+
+        def __call__(self, pool):
+            v = np.asarray([c.pe * c.mac for c in pool], dtype=np.float64)
+            a = np.asarray([c.pe + c.mac for c in pool], dtype=np.float64)
+            return np.stack([v, -a], axis=1)
+
+    p = make_problem("roofline")
+    ev = VectorEval()
+    eng = make_engine("nsga2", p.space(), ev, seed=0, population=8,
+                      max_rounds=3)
+    assert eng.observes_vector
+    res = run_search(eng, ev)
+    assert res.evaluated_values is not None
+    assert res.evaluated_values.shape[1] == 2
+    assert res.evaluated_perf.ndim == 1
+    # scalarizer default: first column (the perf-like term)
+    np.testing.assert_array_equal(res.evaluated_perf,
+                                  res.evaluated_values[:, 0])
