@@ -36,12 +36,14 @@ from __future__ import annotations
 
 import argparse
 import collections
-import json
 import sys
 import time
 from pathlib import Path
 
 import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+import bench_io  # noqa: E402  (shared BENCH_*.json envelope I/O)
 
 from repro.core import apps
 from repro.core.costmodel import ConfigBatch, area_many, performance_gops
@@ -311,12 +313,12 @@ if __name__ == "__main__":
         args.repeats = min(args.repeats, 5)
 
     # read the committed baseline BEFORE --out (possibly the same file)
-    # overwrites it
-    baseline = (json.loads(args.check.read_text())
+    # overwrites it; read_results accepts the legacy flat layout too
+    baseline = (bench_io.read_results(args.check)
                 if args.check and args.check.exists() else None)
     results = run_bench(app=args.app, pool=args.pool, repeats=args.repeats)
     results["smoke"] = bool(args.smoke)
-    args.out.write_text(json.dumps(results, indent=2) + "\n")
+    bench_io.write_results(args.out, "evaluator_throughput", results)
     print(f"[evaluator-throughput] wrote {args.out}")
     if args.check is not None:
         if baseline is None:

@@ -195,11 +195,22 @@ def run_shootout(app_names: tuple = SMOKE_APPS,
     than the terminal best when exact call parity matters.  No XLA
     compiles: seconds per (app, engine) pair.  Results land in
     experiments/<out_name>.
+
+    Anytime curves ride on the `repro.obs` search journal (one record per
+    ask/tell round) instead of a hand-rolled trajectory list; the raw
+    journal is written next to the summary as <out_name stem>.jsonl and
+    the legacy ``trajectory`` key is derived from it, so
+    `plot_shootout.py` needs no changes.
     """
+    import numpy as np
+
+    from repro import obs
     from repro.core.multiapp import AppSpec
     from repro.core.search import Evaluator, make_engine
     from repro.core.space import default_space
 
+    was_active = obs.active()
+    obs.enable(trace=False, metrics=False, journal=True)
     space = default_space()
     engine_kw = dict(SHOOTOUT_ENGINE_KW)
     if max_rounds:                     # optional round bound on top of the
@@ -209,6 +220,7 @@ def run_shootout(app_names: tuple = SMOKE_APPS,
     failures: list = []
     for app in app_names:
         spec = AppSpec.from_app(app, weight_peak_mode=weight_peak_mode)
+        obs.set_context(app=app)
         per_engine: dict = {}
         for engine in engines:
             ev = Evaluator.for_space(spec.stream, space,
@@ -217,7 +229,7 @@ def run_shootout(app_names: tuple = SMOKE_APPS,
                                      backend=backend)
             eng = make_engine(engine, space, ev, seed=seed, **engine_kw)
             t0 = time.time()
-            trajectory = []
+            first_rec = len(obs.journal())
             n_evaluated = 0
             stall = 0
             while (not eng.done and ev.n_scored < budget
@@ -226,11 +238,22 @@ def run_shootout(app_names: tuple = SMOKE_APPS,
                 if not pool:
                     break
                 before = ev.n_scored
-                eng.observe(pool, ev(pool))
+                scores = np.asarray(ev(pool), dtype=np.float64)
+                eng.observe(pool, scores)
                 stall = stall + 1 if ev.n_scored == before else 0
                 n_evaluated += len(pool)
-                trajectory.append({"model_calls": ev.n_scored,
-                                   "best_gops": float(eng.best_perf)})
+                best = float(eng.best_perf)
+                obs.journal_record(
+                    kind="round", engine=eng.name, round=int(eng.rounds),
+                    pool=len(pool), n_scored=int(ev.n_scored),
+                    best=(best if np.isfinite(best) else None),
+                    feasible_frac=(float(np.mean(scores > 0))
+                                   if scores.size else 0.0),
+                    hypervolume=None)
+            rounds = obs.journal().records[first_rec:]
+            trajectory = [{"model_calls": int(r["n_scored"]),
+                           "best_gops": float(r["best"] or 0.0)}
+                          for r in rounds]
             stats = ev.stats()
             stats.pop("scored", None)   # == model_calls; one canonical key
             per_engine[engine] = {
@@ -252,8 +275,13 @@ def run_shootout(app_names: tuple = SMOKE_APPS,
 
     OUT.mkdir(parents=True, exist_ok=True)
     (OUT / out_name).write_text(json.dumps(results, indent=2))
+    journal_path = OUT / (Path(out_name).stem + ".jsonl")
+    obs.journal().write_jsonl(journal_path)
+    if not was_active:
+        obs.disable(reset=True)
     if verbose:
         print(f"[shootout] wrote {OUT / out_name}")
+        print(f"[shootout] wrote journal {journal_path}")
     if failures:
         raise RuntimeError(
             f"no valid (nonzero-GOPS) config found for: {failures} "

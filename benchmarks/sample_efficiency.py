@@ -46,11 +46,14 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import json
+import sys
 import time
 from pathlib import Path
 
 import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+import bench_io  # noqa: E402  (shared BENCH_*.json envelope I/O)
 
 ROOT = Path(__file__).resolve().parents[1]
 DEFAULT_OUT = ROOT / "BENCH_surrogate.json"
@@ -262,7 +265,7 @@ if __name__ == "__main__":
 
     results = run(problems, seeds, budget)
     results["smoke"] = bool(args.smoke)
-    Path(args.out).write_text(json.dumps(results, indent=2))
+    bench_io.write_results(args.out, "sample_efficiency", results)
     print(f"[sample-eff] wrote {args.out}")
     if args.check:
         check_gate(results, args.max_ratio)

@@ -36,6 +36,9 @@ from pathlib import Path
 
 from repro.core import apps as core_apps
 
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+import bench_io  # noqa: E402  (shared BENCH_*.json envelope I/O)
+
 ROOT = Path(__file__).resolve().parents[1]
 DEFAULT_OUT = ROOT / "BENCH_study.json"
 
@@ -139,7 +142,7 @@ def main(argv=None) -> int:
 
     results = run_scaling(names, configs, workers, seed=args.seed)
     results["smoke"] = bool(args.smoke)
-    args.out.write_text(json.dumps(results, indent=2) + "\n")
+    bench_io.write_results(args.out, "study_scaling", results)
     print(f"[study-scaling] wrote {args.out}")
     if args.check:
         check_gate(results, args.min_speedup)

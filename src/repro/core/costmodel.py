@@ -486,6 +486,30 @@ class LatencyBreakdown:
     def stream_valid(self) -> bool:
         return bool(self.valid.all())
 
+    def latency_shares(self) -> np.ndarray:
+        """[ops] fraction of the stream's total latency each op carries."""
+        total = float(self.total_cycles.sum())
+        if total <= 0:
+            return np.zeros_like(np.asarray(self.total_cycles,
+                                            dtype=np.float64))
+        return np.asarray(self.total_cycles, dtype=np.float64) / total
+
+    def bottlenecks(self) -> List[str]:
+        """Per-op bottleneck resource under the max(compute, weight,
+        input) latency model.  Ties resolve compute > weight > input so
+        the label is deterministic (a perfectly balanced op reads as
+        compute-bound, matching the paper's Table-1 framing)."""
+        out: List[str] = []
+        for c, w, i in zip(self.compute_cycles, self.weight_cycles,
+                           self.input_cycles):
+            if c >= w and c >= i:
+                out.append("compute")
+            elif w >= i:
+                out.append("weight")
+            else:
+                out.append("input")
+        return out
+
 
 # --------------------------------------------------------------------------
 # Vectorized evaluation.  `cfg_arrays` maps each AccelConfig field to an

@@ -23,9 +23,12 @@ from __future__ import annotations
 
 import abc
 import dataclasses
+import time
 from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple)
 
 import numpy as np
+
+from repro import obs
 
 __all__ = ["Optimizer", "SearchResult", "ParetoPoint", "run_search",
            "SpaceCodec", "DiscreteSpace", "pareto_front_indices",
@@ -479,6 +482,47 @@ class Optimizer(abc.ABC):
         return i
 
 
+class _RoundJournal:
+    """Per-round search-journal emitter (active only while the obs journal
+    is enabled, so the driver's hot loop pays nothing otherwise).
+
+    Result-inert by construction: `hypervolume` re-reads the pool's
+    (GOPS, area) through `score_with_area` — every row is a cache hit
+    because the driver just scored the pool — so no engine-visible value
+    changes whether the journal is on or off."""
+
+    def __init__(self, engine: Optimizer, evaluator: Any) -> None:
+        self.engine = engine
+        self.evaluator = evaluator
+        self.ref_area = float(getattr(evaluator, "area_budget", 0.0) or 0.0)
+        self.can_hv = (self.ref_area > 0
+                       and hasattr(evaluator, "score_with_area"))
+        self._perf: List[float] = []
+        self._area: List[float] = []
+
+    def emit(self, pool: Sequence[Any], scalar: np.ndarray) -> None:
+        hv = None
+        if self.can_hv:
+            from repro.core.search.synthetic import hypervolume_2d
+            p, a = self.evaluator.score_with_area(pool)
+            self._perf.extend(np.asarray(p, dtype=np.float64).tolist())
+            self._area.extend(np.asarray(a, dtype=np.float64).tolist())
+            hv = float(hypervolume_2d(np.asarray(self._perf),
+                                      np.asarray(self._area),
+                                      self.ref_area))
+        best = float(self.engine.best_perf)
+        obs.journal_record(
+            kind="round",
+            engine=self.engine.name,
+            round=int(self.engine.rounds),
+            pool=int(len(pool)),
+            n_scored=int(getattr(self.evaluator, "n_scored", 0)),
+            best=(best if np.isfinite(best) else None),
+            feasible_frac=(float(np.mean(np.asarray(scalar) > 0))
+                           if len(scalar) else 0.0),
+            hypervolume=hv)
+
+
 def run_search(engine: Optimizer, evaluator) -> SearchResult:
     """Drive `engine` to completion through `evaluator`; collect the log.
 
@@ -497,23 +541,33 @@ def run_search(engine: Optimizer, evaluator) -> SearchResult:
     pools: List[Any] = []
     perf: List[float] = []
     value_rows: List[np.ndarray] = []
+    jrn = _RoundJournal(engine, evaluator) if obs.journal().enabled else None
+    timed = obs.metrics().enabled
     while not engine.done:
-        pool = engine.propose()
-        if pool is None or len(pool) == 0:
-            break
-        scores = np.asarray(evaluator(pool), dtype=np.float64)
-        if scores.ndim == 2:
-            value_rows.append(scores)
-            scalar = engine._scalar(scores)
-            # vector-observing engines (NSGA-II) get the raw rows; the
-            # stateful scalarizer was already fed this batch, so the
-            # engine's own `_scalar` call on it is idempotent
-            observed = scores if engine.observes_vector else scalar
-        else:
-            scalar = observed = scores
-        pools.append(pool)
-        perf.extend(scalar.tolist())
-        engine.observe(pool, observed)
+        t0 = time.perf_counter() if timed else 0.0
+        with obs.span("ask_tell_round", engine=engine.name,
+                      round=engine.rounds):
+            pool = engine.propose()
+            if pool is None or len(pool) == 0:
+                break
+            scores = np.asarray(evaluator(pool), dtype=np.float64)
+            if scores.ndim == 2:
+                value_rows.append(scores)
+                scalar = engine._scalar(scores)
+                # vector-observing engines (NSGA-II) get the raw rows; the
+                # stateful scalarizer was already fed this batch, so the
+                # engine's own `_scalar` call on it is idempotent
+                observed = scores if engine.observes_vector else scalar
+            else:
+                scalar = observed = scores
+            pools.append(pool)
+            perf.extend(scalar.tolist())
+            engine.observe(pool, observed)
+        if timed:
+            obs.observe(f"round_seconds.{engine.name}",
+                        time.perf_counter() - t0)
+        if jrn is not None:
+            jrn.emit(pool, scalar)
     evaluated: List[Any] = []
     for pool in pools:
         evaluated.extend(pool.to_configs() if hasattr(pool, "to_configs")

@@ -143,11 +143,15 @@ class Evaluator:
         constraints applied (what `performance_gops` does), plus areas.
         Area-budget masking happens post-cache so the cached values are
         objective-independent."""
+        from repro import obs
         batch = ConfigBatch.from_configs(configs)
-        perf = performance_gops(batch, self.stream, self.hw,
-                                self.peak_weight_bits, self.peak_input_bits,
-                                backend=self.backend)
-        areas = area_many(batch, self.hw)
+        with obs.span("evaluate_batch", n=len(batch),
+                      backend=self.backend):
+            perf = performance_gops(batch, self.stream, self.hw,
+                                    self.peak_weight_bits,
+                                    self.peak_input_bits,
+                                    backend=self.backend)
+            areas = area_many(batch, self.hw)
         self.n_batches += 1
         self.n_scored += len(batch)
         return perf, areas
@@ -237,6 +241,17 @@ class Evaluator:
         if s.ndim == 2:                     # vector objective: scalarize
             s = self.scalarize(s)
         return float(s[0])
+
+    def explain(self, cfg: AccelConfig):
+        """Per-op Table-1 attribution of one config on this evaluator's
+        stream: cycles, bottleneck resource, latency share, roofline
+        position — `repro.obs.attribution.CostExplanation` (its
+        `.table()` renders the paper-style breakdown)."""
+        from repro.obs.attribution import explain_config
+        return explain_config(cfg, self.stream, hw=self.hw,
+                              peak_weight_bits=self.peak_weight_bits,
+                              peak_input_bits=self.peak_input_bits,
+                              area_budget=self.area_budget)
 
     # ------------------------------------------------------- shard merging
     def cache_export(self) -> Dict[bytes, Tuple[float, float]]:

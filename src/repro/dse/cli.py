@@ -127,6 +127,26 @@ def build_parser() -> argparse.ArgumentParser:
                     help="continue a killed study from its checkpoint file "
                          "(produces the same result the uninterrupted run "
                          "would have)")
+    grp = ap.add_argument_group(
+        "observability (result-inert: the StudyResult JSON is byte-"
+        "identical with or without these)")
+    grp.add_argument("--trace", type=Path, default=None, metavar="JSON",
+                     help="write a Chrome-trace-event JSON (load in "
+                          "Perfetto / chrome://tracing) covering study "
+                          "phases, ask/tell rounds, evaluator batches, "
+                          "checkpoint writes — worker spans included")
+    grp.add_argument("--journal", type=Path, default=None, metavar="JSONL",
+                     help="write the search journal: one record per "
+                          "ask/tell round (incumbent, feasible fraction, "
+                          "hypervolume)")
+    grp.add_argument("--metrics", action="store_true",
+                     help="collect counters/histograms (cache hits, "
+                          "round latency, worker faults) and print a "
+                          "summary table")
+    grp.add_argument("--log-level", default=None,
+                     metavar="LEVEL",
+                     help="attach a stderr handler to the 'repro' logger "
+                          "at LEVEL (DEBUG/INFO/WARNING/...)")
     return ap
 
 
@@ -199,8 +219,38 @@ def _print_result(result: StudyResult) -> None:
               {k: v for k, v in result.best.asdict().items() if k in keys})
 
 
+def _print_metrics(summary: dict) -> None:
+    print("\n[obs] metrics summary:")
+    if summary["counters"]:
+        print("  counters:")
+        for k in sorted(summary["counters"]):
+            print(f"    {k:44s} {summary['counters'][k]:>12g}")
+    if summary["gauges"]:
+        print("  gauges:")
+        for k in sorted(summary["gauges"]):
+            print(f"    {k:44s} {summary['gauges'][k]:>12g}")
+    if summary["histograms"]:
+        print("  histograms:")
+        print(f"    {'name':44s} {'count':>7s} {'mean':>10s} "
+              f"{'p50':>10s} {'p95':>10s} {'max':>10s}")
+        for k in sorted(summary["histograms"]):
+            h = summary["histograms"][k]
+            print(f"    {k:44s} {h['count']:7d} {h['mean']:10.4g} "
+                  f"{h['p50']:10.4g} {h['p95']:10.4g} {h['max']:10.4g}")
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     study, args = study_from_cli(argv)
+
+    from repro import obs
+    if args.log_level is not None:
+        obs.configure_logging(level=args.log_level.upper())
+    want_obs = bool(args.trace or args.journal or args.metrics)
+    if want_obs:
+        obs.enable(trace=args.trace is not None,
+                   metrics=args.metrics,
+                   journal=args.journal is not None)
+
     if args.resume is not None:
         if not args.resume.exists():
             raise SystemExit(f"--resume: no checkpoint at {args.resume}")
@@ -225,6 +275,17 @@ def main(argv: Optional[List[str]] = None) -> int:
 
     path = result.save(args.out)
     print(f"\n[dse] wrote {path}")
+
+    if args.trace is not None:
+        tp = obs.tracer().write(args.trace)
+        print(f"[obs] wrote trace {tp} ({len(obs.tracer())} events)")
+    if args.journal is not None:
+        jp = obs.journal().write_jsonl(args.journal)
+        print(f"[obs] wrote journal {jp} ({len(obs.journal())} records)")
+    if args.metrics:
+        _print_metrics(obs.metrics().summary())
+    if want_obs:
+        obs.disable(reset=True)
     return 0
 
 

@@ -49,9 +49,12 @@ from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple)
 
 import numpy as np
 
+from repro import obs
 from repro.core.costmodel import (ConfigBatch, HardwareConstants, OpStream,
                                   area_many, performance_gops)
 from repro.core.search import Evaluator, config_key, optimize_for_app
+
+_LOG = obs.get_logger("dse.parallel")
 
 __all__ = ["ParallelExecutor", "ParallelExecutionWarning", "FaultPlan",
            "EvalParams", "canonical_front_indices", "merge_pareto_fronts",
@@ -177,6 +180,9 @@ class ParallelExecutor:
                 break
             if attempt > 0:
                 self.retry_rounds += 1
+                obs.counter("pool.retry_rounds")
+                obs.log_event(_LOG, "info", "pool.retry",
+                              attempt=attempt, tasks=len(remaining))
             failed = self._pool_round(fn, payloads, remaining, wire_fault,
                                       results, on_result)
             if failed and attempt == self.max_retries:
@@ -185,11 +191,14 @@ class ParallelExecutor:
             remaining = failed
         if remaining:
             self.degraded = True
-            warnings.warn(
-                f"parallel execution failed for {len(remaining)} task(s) "
-                f"after {1 + self.max_retries} pool round(s); degrading to "
-                f"serial in-process execution",
-                ParallelExecutionWarning, stacklevel=2)
+            obs.counter("pool.serial_degradations")
+            msg = (f"parallel execution failed for {len(remaining)} task(s) "
+                   f"after {1 + self.max_retries} pool round(s); degrading "
+                   f"to serial in-process execution")
+            obs.log_event(_LOG, "warning", "pool.serial_degradation",
+                          tasks=len(remaining),
+                          rounds=1 + self.max_retries)
+            warnings.warn(msg, ParallelExecutionWarning, stacklevel=2)
             _serial(remaining)
         return [results[i] for i in range(len(payloads))]
 
@@ -220,10 +229,15 @@ class ParallelExecutor:
                 i = futures[fut]
                 try:
                     results[i] = fut.result()
-                except Exception:
+                except Exception as e:
                     # task raise, pickling failure, or BrokenProcessPool
                     # (a killed worker poisons every pending future)
                     failed.append(i)
+                    obs.counter("pool.task_failures")
+                    obs.instant("pool.task_failure", task=i,
+                                error=type(e).__name__)
+                    obs.log_event(_LOG, "info", "pool.task_failure",
+                                  task=i, error=type(e).__name__)
                     continue
                 if on_result is not None:
                     on_result(i, results[i])
@@ -267,16 +281,33 @@ def _search_app_task(payload: Dict[str, Any]) -> Dict[str, Any]:
     """Run one application's multi-restart search in a worker.
 
     Returns a portable record (no live evaluator handle): the incumbent,
-    the full evaluated log as a `ConfigBatch`, and the worker shard's
-    raw-metric cache for the parent-side merge."""
-    params: EvalParams = payload["params"]
-    ev = params.build()
-    res = optimize_for_app(
-        params.stream, payload["space"],
-        k=payload["k"], restarts=payload["restarts"],
-        seed=payload["seed"], max_rounds=payload["max_rounds"],
-        engine=payload["engine"], engine_kwargs=payload["engine_kwargs"],
-        evaluator=ev)
+    the full evaluated log as a `ConfigBatch`, the worker shard's
+    raw-metric cache for the parent-side merge, and — when the payload
+    carries obs wire state and this is a fresh pool process — the task's
+    exported trace/journal/metrics buffers (`"obs"`, None on the
+    in-process path, where events land in the live parent buffers)."""
+    owned = obs.begin_task(payload.get("obs"))
+    prev_ctx = obs.get_context()
+    obs.set_context(app=payload["name"])
+    export = None
+    try:
+        params: EvalParams = payload["params"]
+        ev = params.build()
+        with obs.span("search_app", app=payload["name"],
+                      engine=str(payload["engine"]),
+                      seed=int(payload["seed"]),
+                      restarts=int(payload["restarts"])):
+            res = optimize_for_app(
+                params.stream, payload["space"],
+                k=payload["k"], restarts=payload["restarts"],
+                seed=payload["seed"], max_rounds=payload["max_rounds"],
+                engine=payload["engine"],
+                engine_kwargs=payload["engine_kwargs"],
+                evaluator=ev)
+    finally:
+        export = obs.end_task(owned)
+        if not owned:
+            obs.replace_context(prev_ctx)
     return {
         "name": payload["name"],
         "best": res.best,
@@ -290,6 +321,7 @@ def _search_app_task(payload: Dict[str, Any]) -> Dict[str, Any]:
         "engine": res.engine,
         "cache": ev.cache_export(),
         "stats": ev.stats(),
+        "obs": export,
     }
 
 

@@ -39,11 +39,13 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import time
 from pathlib import Path
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro import obs
 from repro.core.costmodel import (AccelConfig, ConfigBatch,
                                   HardwareConstants, OpStream,
                                   area_many, performance_gops)
@@ -125,6 +127,47 @@ def _cfg_load(d: Optional[Dict]) -> Any:
         return dict(d)
 
 
+def _combine_chunk_records(recs: Sequence[Dict]) -> Dict:
+    """Reduce one app's restart-chunk worker records (ascending restart
+    offset) into the record a single whole-app task would have returned.
+
+    Mirrors `SearchResult.merge` exactly: earliest strict-max incumbent
+    (which also contributes history/engine), logs concatenated in chunk
+    order, rounds summed.  Shard caches are content-addressed, so the
+    first writer wins without conflicts; stats counters sum."""
+    best = recs[0]
+    for r in recs[1:]:
+        if float(r["best_perf"]) > float(best["best_perf"]):
+            best = r
+    batches = [r["evaluated"] for r in recs if r["evaluated"] is not None]
+    values = [r["evaluated_values"] for r in recs
+              if r.get("evaluated_values") is not None]
+    cache: Dict = {}
+    for r in recs:
+        for k, v in (r.get("cache") or {}).items():
+            cache.setdefault(k, v)
+    stats: Dict[str, int] = {}
+    for r in recs:
+        for k, v in (r.get("stats") or {}).items():
+            stats[k] = stats.get(k, 0) + int(v)
+    return {
+        "name": best["name"],
+        "best": best["best"],
+        "best_perf": float(best["best_perf"]),
+        "history": list(best["history"]),
+        "evaluated": ConfigBatch.concat(batches) if batches else None,
+        "evaluated_perf": np.concatenate(
+            [np.asarray(r["evaluated_perf"], dtype=np.float64)
+             for r in recs]),
+        "evaluated_values": (np.vstack(values) if values else None),
+        "rounds": sum(int(r["rounds"]) for r in recs),
+        "engine": best["engine"],
+        "cache": cache,
+        "stats": stats,
+        "obs": None,              # chunk exports merge separately
+    }
+
+
 @dataclasses.dataclass
 class StudyResult:
     """Outcome of `Study.run`, JSON-persistable for cross-run comparison.
@@ -150,9 +193,13 @@ class StudyResult:
 
     # ------------------------------------------------------------ persist
     def to_json(self) -> Dict:
+        # `meta["telemetry"]` (runtime observability snapshot, attached
+        # only when `repro.obs` is active) is excluded: persisted results
+        # must stay byte-identical whether telemetry was on or off
         return {
             "version": 1,
-            "meta": self.meta,
+            "meta": {k: v for k, v in self.meta.items()
+                     if k != "telemetry"},
             "best": _cfg_dict(self.best),
             "best_score": float(self.best_score),
             "per_app": self.per_app,
@@ -359,7 +406,12 @@ class Study:
         return self._eval_params(spec).build()
 
     def _executor(self) -> ParallelExecutor:
-        return self.executor or ParallelExecutor(workers=self.workers)
+        """One executor per `run()` (cached so retry/degradation counters
+        accumulate across phases and land in the telemetry snapshot)."""
+        if getattr(self, "_run_executor", None) is None:
+            self._run_executor = (self.executor
+                                  or ParallelExecutor(workers=self.workers))
+        return self._run_executor
 
     def _meta(self) -> Dict:
         eng = (self.engine if isinstance(self.engine, str)
@@ -409,11 +461,18 @@ class Study:
             return self._run_generic()
 
         self._ckpt_every = max(1, int(checkpoint_every))
-        per_app_results = self._run_app_searches(
-            checkpoint_path, self._ckpt_every, on_checkpoint)
-        result = self._synthesize(per_app_results)
+        self._run_executor = None
+        self._run_stats: Dict[str, Dict[str, int]] = {}
+        t0 = time.perf_counter()
+        with obs.span("study", study=self.name, apps=len(self.specs)):
+            with obs.span("phase.search", apps=len(self.specs)):
+                per_app_results = self._run_app_searches(
+                    checkpoint_path, self._ckpt_every, on_checkpoint)
+            with obs.span("phase.synthesize"):
+                result = self._synthesize(per_app_results)
         if checkpoint_path is not None:
             Path(checkpoint_path).unlink(missing_ok=True)
+        self._attach_telemetry(result, time.perf_counter() - t0)
         return result
 
     # ----------------------------------------------- per-app search phase
@@ -425,12 +484,28 @@ class Study:
         if todo:
             if checkpoint_path is not None:
                 self._require_resumable()
-            payloads = [self._task_payload(i) for i in todo]
+            plan = self._chunk_plan(todo)
+            payloads = [self._task_payload(i, offset, length)
+                        for i, offset, length in plan]
+            chunks_of: Dict[int, int] = {}
+            for i, _, _ in plan:
+                chunks_of[i] = chunks_of.get(i, 0) + 1
+            pending: Dict[int, Dict[int, Dict]] = {}
             state = {"since_ckpt": 0}
 
             def on_result(pos: int, rec: Dict) -> None:
-                i = todo[pos]
-                results[i] = self._rebuild_result(i, rec)
+                i, offset, _ = plan[pos]
+                chunks = pending.setdefault(i, {})
+                chunks[offset] = rec
+                if len(chunks) < chunks_of[i]:
+                    return            # more restart chunks still in flight
+                recs = [chunks[o] for o in sorted(chunks)]
+                del pending[i]
+                whole = recs[0] if len(recs) == 1 \
+                    else _combine_chunk_records(recs)
+                results[i] = self._rebuild_result(i, whole)
+                self._run_stats[self.specs[i].name] = dict(
+                    whole.get("stats") or {})
                 if checkpoint_path is None:
                     return
                 state["since_ckpt"] += 1
@@ -441,23 +516,56 @@ class Study:
                     if on_checkpoint is not None:
                         on_checkpoint(len(results))
 
-            self._executor().map(_search_app_task, payloads,
-                                 on_result=on_result)
+            outs = self._executor().map(_search_app_task, payloads,
+                                        on_result=on_result)
+            # fold worker-side obs exports in canonical payload order
+            # (never completion order) so merged buffers are reproducible
+            for rec in outs:
+                obs.merge_worker(rec.get("obs"))
         return {self.specs[i].name: results[i]
                 for i in range(len(self.specs))}
 
-    def _task_payload(self, i: int) -> Dict:
+    def _chunk_plan(self, todo: List[int]) -> List[Tuple[int, int, int]]:
+        """(spec_index, restart_offset, n_restarts) tasks covering `todo`.
+
+        When the pool has more workers than apps, each app's restart loop
+        splits into contiguous chunks so the spare workers help; the
+        chunk payload's seed is the *canonical* seed of its first restart
+        (`seed + 7919*i + 1000*offset` — exactly what `optimize_for_app`
+        would hand that restart in one piece), and `SearchResult.merge`'s
+        earliest-strict-max reduce is associative, so any chunking
+        produces byte-identical results.  An explicit engine seed in
+        `engine_kwargs` overrides the canonical schedule, so chunking is
+        skipped there (every chunk would rerun the same restart)."""
+        restarts = int(self.budget.restarts)
+        workers = (self.executor.workers if self.executor is not None
+                   else self.workers)
+        if (restarts <= 1 or workers <= 1 or not todo
+                or "seed" in self.budget.engine_kwargs):
+            return [(i, 0, restarts) for i in todo]
+        per_app = min(restarts, max(1, -(-workers // len(todo))))
+        plan: List[Tuple[int, int, int]] = []
+        for i in todo:
+            for part in np.array_split(np.arange(restarts), per_app):
+                if len(part):
+                    plan.append((i, int(part[0]), int(len(part))))
+        return plan
+
+    def _task_payload(self, i: int, offset: int = 0,
+                      restarts: Optional[int] = None) -> Dict:
         spec = self.specs[i]
         return {"name": spec.name,
                 "spec_index": i,
                 "space": self._search_space,
                 "engine": self.engine,
                 "k": self.budget.k,
-                "restarts": self.budget.restarts,
+                "restarts": (int(restarts) if restarts is not None
+                             else self.budget.restarts),
                 "max_rounds": self.budget.max_rounds,
                 "engine_kwargs": dict(self.budget.engine_kwargs) or None,
-                "seed": self.seed + 7919 * i,
-                "params": self._eval_params(spec)}
+                "seed": self.seed + 7919 * i + 1000 * int(offset),
+                "params": self._eval_params(spec),
+                "obs": obs.wire_state()}
 
     def _rebuild_result(self, i: int, rec: Dict) -> SearchResult:
         """Portable worker record -> SearchResult with a parent-side
@@ -513,20 +621,64 @@ class Study:
 
     # ------------------------------------------------------- generic mode
     def _run_generic(self) -> StudyResult:
-        res = optimize_for_app(
-            None, self.space,
-            k=self.budget.k, restarts=self.budget.restarts,
-            seed=self.seed, max_rounds=self.budget.max_rounds,
-            engine=self.engine,
-            engine_kwargs=dict(self.budget.engine_kwargs) or None,
-            evaluator=self.evaluator)
+        self._run_executor = None
+        self._run_stats = {}
+        t0 = time.perf_counter()
+        with obs.span("study", study=self.name, mode="generic"):
+            res = optimize_for_app(
+                None, self.space,
+                k=self.budget.k, restarts=self.budget.restarts,
+                seed=self.seed, max_rounds=self.budget.max_rounds,
+                engine=self.engine,
+                engine_kwargs=dict(self.budget.engine_kwargs) or None,
+                evaluator=self.evaluator)
+        stats_fn = getattr(self.evaluator, "stats", None)
+        if callable(stats_fn):
+            self._run_stats["space"] = dict(stats_fn())
         per_app = {"space": {"best": _cfg_dict(res.best),
                              "best_perf": float(res.best_perf),
                              "n_evaluated": len(res.evaluated),
                              "rounds": int(res.rounds)}}
-        return StudyResult(meta=self._meta(), best=res.best,
-                           best_score=float(res.best_perf), per_app=per_app,
-                           per_app_results={"space": res})
+        result = StudyResult(meta=self._meta(), best=res.best,
+                             best_score=float(res.best_perf),
+                             per_app=per_app,
+                             per_app_results={"space": res})
+        self._attach_telemetry(result, time.perf_counter() - t0)
+        return result
+
+    # ----------------------------------------------- telemetry snapshot
+    def _attach_telemetry(self, result: StudyResult, wall: float) -> None:
+        """Runtime observability snapshot into `meta["telemetry"]` (only
+        when `repro.obs` is active; `StudyResult.to_json` excludes the
+        key, so persisted output is byte-identical either way)."""
+        if not obs.active():
+            return
+        per_app = {a: dict(s)
+                   for a, s in getattr(self, "_run_stats", {}).items()}
+        scored = sum(int(s.get("scored", 0)) for s in per_app.values())
+        hits = sum(int(s.get("cache_hits", 0)) for s in per_app.values())
+        misses = sum(int(s.get("cache_misses", 0))
+                     for s in per_app.values())
+        obs.counter("evaluator.scored", scored)
+        obs.counter("evaluator.cache_hits", hits)
+        obs.counter("evaluator.cache_misses", misses)
+        ex = getattr(self, "_run_executor", None)
+        result.meta["telemetry"] = {
+            "wall_seconds": float(wall),
+            "configs_scored": scored,
+            "configs_per_second": (scored / wall if wall > 0 else 0.0),
+            "cache_hits": hits,
+            "cache_misses": misses,
+            "per_app": per_app,
+            "executor": ({"workers": int(ex.workers),
+                          "retry_rounds": int(ex.retry_rounds),
+                          "degraded": bool(ex.degraded)}
+                         if ex is not None else None),
+            "metrics": (obs.metrics().summary()
+                        if obs.metrics().enabled else None),
+            "journal_records": len(obs.journal()),
+            "trace_events": len(obs.tracer()),
+        }
 
     # --------------------------------------------- checkpointing / resume
     def _require_resumable(self) -> None:
@@ -655,8 +807,10 @@ class Study:
                           for i in sorted(results)},
         }
         tmp = path.with_name(path.name + ".tmp")
-        tmp.write_text(json.dumps(rec))
-        os.replace(tmp, path)
+        with obs.span("checkpoint_write", completed=len(results)):
+            tmp.write_text(json.dumps(rec))
+            os.replace(tmp, path)
+        obs.counter("study.checkpoint_writes")
 
     @classmethod
     def resume(cls, path, *, workers: Optional[int] = None,
@@ -732,16 +886,19 @@ class Study:
             payloads = [{"batch": batch.take(rows), "hw": self.space.hw,
                          "apps": apps, "constraints": tuple(self._extra)}
                         for rows in shards]
-            parts = ex.map(_cross_eval_task, payloads)
+            with obs.span("cross_eval", candidates=len(batch),
+                          shards=len(payloads)):
+                parts = ex.map(_cross_eval_task, payloads)
             return np.concatenate(parts, axis=1)
-        cross = np.zeros((len(self.specs), len(batch)))
-        for i, (stream, pw, pi) in enumerate(apps):
-            cross[i] = performance_gops(batch, stream, self.space.hw,
-                                        pw, pi)
-        if self._extra:
-            metrics = {"area": area_many(batch, self.space.hw)}
-            mask = feasible_mask_all(self._extra, batch, metrics)
-            cross[:, ~mask] = 0.0
+        with obs.span("cross_eval", candidates=len(batch), shards=1):
+            cross = np.zeros((len(self.specs), len(batch)))
+            for i, (stream, pw, pi) in enumerate(apps):
+                cross[i] = performance_gops(batch, stream, self.space.hw,
+                                            pw, pi)
+            if self._extra:
+                metrics = {"area": area_many(batch, self.space.hw)}
+                mask = feasible_mask_all(self._extra, batch, metrics)
+                cross[:, ~mask] = 0.0
         return cross
 
     def _synthesize_geomean(self, per_app_results, per_app) -> StudyResult:
