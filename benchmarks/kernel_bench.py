@@ -3,17 +3,24 @@
 Wall times here are CPU interpret-mode (correctness harness), NOT TPU
 numbers; the *derived* column is the tile cost model's predicted v5e
 latency for the production shape — the quantity the DSE optimizes.
+
+`--smoke` runs every kernel once at reduced shapes and exits nonzero on
+any correctness failure — the CI lowering check for the Pallas kernels
+(interpret mode on CPU; the same code lowers for real on TPU/GPU).
 """
 
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.kernel_tune import tile_cost, TileConfig, tune_matmul_tiles
 from repro.kernels import ops
+from repro.kernels.costmodel import gather_rows
 
 
 def _time(fn, *args, n=3, **kw):
@@ -53,6 +60,19 @@ def run(verbose: bool = True) -> list:
     rows.append(("rglru_scan_interp_s512", us,
                  "log_step_doubling=7_steps_per_128tile"))
 
+    # cost-model gather-reduce: the [C] -> [C, O] op-table contraction of
+    # the fused evaluation hot path (tiled one-hot gather, exact for int64)
+    with jax.experimental.enable_x64():
+        tbl = jnp.asarray(
+            np.random.default_rng(0).integers(-2**40, 2**40, (512, 16)))
+        cidx = jnp.asarray(
+            np.random.default_rng(1).integers(0, 512, 4096))
+        us = _time(gather_rows, tbl, cidx, interpret=True)
+        got = np.asarray(gather_rows(tbl, cidx, interpret=True))
+        np.testing.assert_array_equal(got, np.asarray(tbl)[np.asarray(cidx)])
+    rows.append(("costmodel_gather_interp_4096x512x16", us,
+                 "one_hot_reduce_exact_int64"))
+
     if verbose:
         print("name,us_per_call,derived")
         for r in rows:
@@ -60,5 +80,52 @@ def run(verbose: bool = True) -> list:
     return rows
 
 
+def run_smoke(verbose: bool = True) -> None:
+    """One pass per kernel at small shapes, correctness asserted — the CI
+    Pallas lowering check (interpret mode on CPU)."""
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+
+    x = jax.random.normal(k1, (128, 128), jnp.float32)
+    y = jax.random.normal(k2, (128, 128), jnp.float32)
+    got = ops.matmul(x, y, bm=128, bk=128, bn=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x) @ np.asarray(y),
+                               rtol=1e-5, atol=1e-5)
+
+    q = jax.random.normal(k1, (1, 128, 2, 64), jnp.float32)
+    kk = jax.random.normal(k2, (1, 128, 2, 64), jnp.float32)
+    v = jax.random.normal(k3, (1, 128, 2, 64), jnp.float32)
+    out = ops.flash_attention(q, kk, v, causal=True, bq=128, bkv=128,
+                              interpret=True)
+    assert np.isfinite(np.asarray(out)).all()
+
+    a = jax.random.uniform(k1, (1, 128, 256), jnp.float32, 0.8, 0.999)
+    b = jax.random.normal(k2, (1, 128, 256), jnp.float32)
+    out = ops.rglru_scan(a, b, bs=128, bw=256, interpret=True)
+    assert np.isfinite(np.asarray(out)).all()
+
+    with jax.experimental.enable_x64():
+        rng = np.random.default_rng(0)
+        tbl = jnp.asarray(rng.integers(-2**40, 2**40, (96, 7)))
+        cidx = jnp.asarray(rng.integers(0, 96, 300))
+        got = np.asarray(gather_rows(tbl, cidx, interpret=True))
+        np.testing.assert_array_equal(got, np.asarray(tbl)[np.asarray(cidx)])
+        ftbl = jnp.asarray(rng.random((96, 7)) * 1e9)
+        got = np.asarray(gather_rows(ftbl, cidx, interpret=True))
+        np.testing.assert_array_equal(got,
+                                      np.asarray(ftbl)[np.asarray(cidx)])
+
+    if verbose:
+        print("[kernel-smoke] matmul, flash_attention, rglru_scan, "
+              "costmodel gather_rows: OK")
+
+
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="one correctness pass per kernel (CI mode)")
+    args = ap.parse_args()
+    if args.smoke:
+        run_smoke()
+    else:
+        run()

@@ -37,16 +37,19 @@ top-10 % candidate selection of §5.1 consumes the full log).
 The shared Evaluator
 ====================
 
-`Evaluator` (see `evaluator.py`) scores candidate pools through one batched
-`evaluate_stream_many` call and memoizes in an LRU cache, so repeated
-points — across rounds, restarts, and even different engines sharing one
-evaluator — are never re-scored.  Pools are **array-native**: engines on
-the accelerator space propose `ConfigBatch` struct-of-arrays populations
-(built straight from `SpaceCodec` index arrays via
-`DesignSpace.decode_batch`, validity-repaired in bulk by
-`repair_for_peaks_many`), cache keys are vectorized row `tobytes()` over
-the canonical field matrix, and areas come from the vectorized
-`area_many` — no dataclass is materialized on the scoring hot path.
+`Evaluator` (see `evaluator.py`) scores candidate pools through the fused
+single-pass cost model (`FusedStreamScorer`, bit-identical to
+`performance_gops` + `area_many`) and memoizes in a vectorized
+open-addressed row cache (`rowcache.RowHashCache`: 64-bit row hashes,
+exact-key collision fallback, LRU eviction), so repeated points — across
+rounds, restarts, and even different engines sharing one evaluator — are
+never re-scored and cache probing costs a handful of array ops per pool.
+Pools are **array-native**: engines on the accelerator space propose
+`ConfigBatch` struct-of-arrays populations (built straight from
+`SpaceCodec` index arrays via `DesignSpace.decode_batch`,
+validity-repaired in bulk by `repair_for_peaks_many`) — no dataclass is
+materialized on the scoring hot path, and `run_search` journals how many
+proposals each round repeats from earlier rounds (`dedup_skipped`).
 `FunctionEvaluator` gives the same pool interface over an arbitrary scalar
 scorer (e.g. compile-and-measure cells in `core/autotune.py`); pass
 `batch_score_fn` to score each pool's cache-miss set in one call.
@@ -106,6 +109,8 @@ from repro.core.search.base import (DiscreteSpace, Optimizer, ParetoPoint,
                                     run_search, unpack_config)
 from repro.core.search.evaluator import (Evaluator, FunctionEvaluator,
                                          config_key)
+from repro.core.search.rowcache import (RowHashCache, first_occurrence,
+                                        hash_rows)
 from repro.core.search.greedy import GreedyOptimizer
 from repro.core.search.anneal import AnnealOptimizer
 from repro.core.search.genetic import GeneticOptimizer
@@ -119,6 +124,7 @@ __all__ = [
     "ConfigBatch", "repair_with", "repair_many_with",
     "pack_config", "unpack_config",
     "Evaluator", "FunctionEvaluator", "config_key",
+    "RowHashCache", "first_occurrence", "hash_rows",
     "GreedyOptimizer", "AnnealOptimizer", "GeneticOptimizer",
     "RandomSearchOptimizer", "TPEOptimizer", "NSGA2Optimizer",
     "ENGINES", "EngineSpec", "filter_kwargs", "make_engine",

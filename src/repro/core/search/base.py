@@ -500,7 +500,8 @@ class _RoundJournal:
         self._perf: List[float] = []
         self._area: List[float] = []
 
-    def emit(self, pool: Sequence[Any], scalar: np.ndarray) -> None:
+    def emit(self, pool: Sequence[Any], scalar: np.ndarray,
+             dedup_skipped: int = 0) -> None:
         hv = None
         if self.can_hv:
             from repro.core.search.synthetic import hypervolume_2d
@@ -517,10 +518,47 @@ class _RoundJournal:
             round=int(self.engine.rounds),
             pool=int(len(pool)),
             n_scored=int(getattr(self.evaluator, "n_scored", 0)),
+            dedup_skipped=int(dedup_skipped),
             best=(best if np.isfinite(best) else None),
             feasible_frac=(float(np.mean(np.asarray(scalar) > 0))
                            if len(scalar) else 0.0),
             hypervolume=hv)
+
+
+class _CrossRoundDedup:
+    """Tracks how many proposed rows were already proposed in an earlier
+    round of the same search (the engines re-propose heavily near
+    convergence).  Those rows never reach the cost model — the evaluator's
+    hashed row cache serves them as hits — so this is pure bookkeeping:
+    the per-round skip count lands in the search journal and accumulates
+    onto `evaluator.dedup_skipped` for the Study telemetry snapshot.
+    Counting is hash-based (collisions could overcount by one-in-2^64);
+    scores are never affected."""
+
+    def __init__(self) -> None:
+        self._seen: set = set()
+
+    def observe(self, pool: Sequence[Any]) -> int:
+        from repro.core.costmodel import ConfigBatch
+        from repro.core.search import rowcache
+        if hasattr(pool, "matrix"):
+            keys = rowcache.hash_rows(pool.matrix).tolist()
+        elif pool and hasattr(pool[0], next(iter(ConfigBatch._INDEX))):
+            keys = rowcache.hash_rows(
+                ConfigBatch.from_configs(pool).matrix).tolist()
+        else:
+            # generic spaces (e.g. autotune ExecPoint) carry arbitrary
+            # dataclass points; fall back to exact field-tuple keys
+            from repro.core.search.evaluator import config_key
+            keys = [config_key(c) for c in pool]
+        seen = self._seen
+        skipped = 0
+        for h in keys:
+            if h in seen:
+                skipped += 1
+            else:
+                seen.add(h)
+        return skipped
 
 
 def run_search(engine: Optimizer, evaluator) -> SearchResult:
@@ -543,6 +581,7 @@ def run_search(engine: Optimizer, evaluator) -> SearchResult:
     value_rows: List[np.ndarray] = []
     jrn = _RoundJournal(engine, evaluator) if obs.journal().enabled else None
     timed = obs.metrics().enabled
+    dedup = _CrossRoundDedup()
     while not engine.done:
         t0 = time.perf_counter() if timed else 0.0
         with obs.span("ask_tell_round", engine=engine.name,
@@ -550,6 +589,9 @@ def run_search(engine: Optimizer, evaluator) -> SearchResult:
             pool = engine.propose()
             if pool is None or len(pool) == 0:
                 break
+            round_skipped = dedup.observe(pool)
+            evaluator.dedup_skipped = (
+                getattr(evaluator, "dedup_skipped", 0) + round_skipped)
             scores = np.asarray(evaluator(pool), dtype=np.float64)
             if scores.ndim == 2:
                 value_rows.append(scores)
@@ -567,7 +609,7 @@ def run_search(engine: Optimizer, evaluator) -> SearchResult:
             obs.observe(f"round_seconds.{engine.name}",
                         time.perf_counter() - t0)
         if jrn is not None:
-            jrn.emit(pool, scalar)
+            jrn.emit(pool, scalar, dedup_skipped=round_skipped)
     evaluated: List[Any] = []
     for pool in pools:
         evaluated.extend(pool.to_configs() if hasattr(pool, "to_configs")

@@ -12,11 +12,15 @@ extra.
 
 The evaluation path is array-native: pools may be `ConfigBatch`
 struct-of-arrays populations (what the engines propose) or plain
-`AccelConfig` sequences; either way the cache key is a vectorized row
-`tobytes()` over the canonical field matrix (no per-config dict sorting),
-the area comes from the vectorized `area_many`, and the cost model sees one
-`[C, O]` broadcast call per miss set.  `backend="jax"` routes that call
-through the jit-compiled kernel.
+`AccelConfig` sequences; either way the cache is the vectorized
+`rowcache.RowHashCache` — a 64-bit row hash over the canonical field
+matrix feeding an open-addressed int64 table with exact-key collision
+fallback — so probing a 4096-row pool is a handful of array ops, not a
+Python loop.  Cache misses flow through the fused scorer
+(`FusedStreamScorer`, bit-identical to `performance_gops` + `area_many`
+in one pass); `backend="jax"` routes them through the persistent jitted
+kernel in `repro.kernels.costmodel`, and `backend="numpy-ref"` keeps the
+verbatim Eqs. (1)-(13) broadcast reference for parity testing.
 
 `FunctionEvaluator` wraps an arbitrary scalar scoring function (e.g. the
 compile-and-measure `CellEvaluator` of `core/autotune.py`) behind the same
@@ -33,8 +37,10 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.costmodel import (AccelConfig, ConfigBatch,
-                                  HardwareConstants, OpStream, area_many,
-                                  performance_gops)
+                                  FusedStreamScorer, HardwareConstants,
+                                  OpStream, area_many, performance_gops)
+from repro.core.search import rowcache
+from repro.core.search.rowcache import RowHashCache
 
 __all__ = ["Evaluator", "FunctionEvaluator", "config_key"]
 
@@ -102,7 +108,8 @@ class Evaluator:
                  cache_size: int = 1 << 16,
                  backend: str = "numpy",
                  objective: Optional[Any] = None,
-                 constraints: Optional[Sequence[Any]] = None):
+                 constraints: Optional[Sequence[Any]] = None,
+                 domains: Optional[Dict[str, Sequence[int]]] = None):
         self.stream = stream
         self.hw = hw or HardwareConstants()
         self.peak_weight_bits = peak_weight_bits
@@ -116,9 +123,17 @@ class Evaluator:
         self.backend = backend
         self.objective = objective
         self.constraints = tuple(constraints or ())
-        self._cache = _LRU(cache_size)
+        # Known per-field value domains (DesignSpace.domains) let the fused
+        # scorer build its op tables domain-complete up front; without them
+        # the tables lazily grow on first sight of each new value.
+        self.domains = ({k: tuple(v) for k, v in domains.items()}
+                        if domains else None)
+        self._cache = RowHashCache(len(ConfigBatch._INDEX), cache_size)
+        self._fused = None       # lazily built per-backend scorer
+        self._fused_ready = False
         self.n_batches = 0       # batched model invocations
         self.n_scored = 0        # configs actually sent to the model
+        self.dedup_skipped = 0   # cross-round re-proposals (run_search)
 
     @classmethod
     def for_space(cls, stream: OpStream, space,
@@ -133,7 +148,34 @@ class Evaluator:
                    peak_input_bits=peak_input_bits,
                    area_budget=space.area_budget, cache_size=cache_size,
                    backend=backend, objective=objective,
-                   constraints=constraints)
+                   constraints=constraints,
+                   domains=getattr(space, "domains", None))
+
+    # ------------------------------------------------------- fused scorers
+    def _scorer(self):
+        """The fused (GOPS, area) scorer for this backend, or None when the
+        stream/backend must take the reference `performance_gops` path.
+        Built once and reused — the jax variant holds the persistent jitted
+        function and device-resident op tables."""
+        if self._fused_ready:
+            return self._fused
+        self._fused_ready = True
+        if self.backend == "numpy-ref" or \
+                not FusedStreamScorer.supports(self.stream):
+            self._fused = None
+        elif self.backend == "jax":
+            try:
+                from repro.kernels.costmodel import FusedJaxScorer
+                self._fused = FusedJaxScorer(
+                    self.stream, self.hw, self.peak_weight_bits,
+                    self.peak_input_bits, domains=self.domains)
+            except ImportError:          # no jax: fall back to reference
+                self._fused = None
+        else:
+            self._fused = FusedStreamScorer(
+                self.stream, self.hw, self.peak_weight_bits,
+                self.peak_input_bits, domains=self.domains)
+        return self._fused
 
     # -------------------------------------------------------------- scoring
     def _score_batch(self, configs) -> Tuple[np.ndarray, np.ndarray]:
@@ -147,11 +189,15 @@ class Evaluator:
         batch = ConfigBatch.from_configs(configs)
         with obs.span("evaluate_batch", n=len(batch),
                       backend=self.backend):
-            perf = performance_gops(batch, self.stream, self.hw,
-                                    self.peak_weight_bits,
-                                    self.peak_input_bits,
-                                    backend=self.backend)
-            areas = area_many(batch, self.hw)
+            scorer = self._scorer()
+            if scorer is not None:
+                perf, areas = scorer.metrics(batch.matrix)
+            else:
+                perf = performance_gops(batch, self.stream, self.hw,
+                                        self.peak_weight_bits,
+                                        self.peak_input_bits,
+                                        backend=self.backend)
+                areas = area_many(batch, self.hw)
         self.n_batches += 1
         self.n_scored += len(batch)
         return perf, areas
@@ -195,45 +241,37 @@ class Evaluator:
     def _metrics_of(self, batch) -> Tuple[np.ndarray, np.ndarray]:
         """Raw (gops[N], area[N]) for a `ConfigBatch` through the cache.
 
-        One pass over the vectorized row keys resolves hits straight into
-        the output arrays; the miss set is gathered by row index, scored in
-        one batched model call, scattered back, and bulk-inserted into the
-        LRU (single trim)."""
-        keys = batch.row_keys()
-        n = len(keys)
+        Fully vectorized: one 64-bit hash pass over the row matrix, exact
+        in-pool dedup (duplicates count neither as hits nor misses — the
+        historical contract), one batched table probe for the unique rows,
+        one fused model call for the miss set, one scatter back.  Forced
+        hash collisions only lengthen probe chains; results are exact."""
+        matrix = np.ascontiguousarray(batch.matrix)
+        n = matrix.shape[0]
         perf = np.empty(n, dtype=np.float64)
         area = np.empty(n, dtype=np.float64)
-        cache, data = self._cache, self._cache.data
-        first_row: Dict[bytes, int] = {}
-        dup_rows: List[Tuple[int, int]] = []
-        fresh_keys: List[bytes] = []
-        fresh_rows: List[int] = []
-        for i, k in enumerate(keys):
-            j = first_row.get(k)
-            if j is not None:               # in-pool duplicate: copy later
-                dup_rows.append((i, j))
-                continue
-            first_row[k] = i
-            hit = data.get(k)
-            if hit is not None:
-                data.move_to_end(k)
-                cache.hits += 1
-                perf[i], area[i] = hit
-            else:
-                cache.misses += 1
-                fresh_keys.append(k)
-                fresh_rows.append(i)
-        if fresh_rows:
-            rows = np.asarray(fresh_rows, dtype=np.int64)
-            fp, fa = self._score_batch(batch.take(rows))
-            perf[rows] = fp
-            area[rows] = fa
-            for k, pa in zip(fresh_keys, zip(fp.tolist(), fa.tolist())):
-                data[k] = pa
-            cache.trim()
-        for i, j in dup_rows:
-            perf[i] = perf[j]
-            area[i] = area[j]
+        if n == 0:
+            return perf, area
+        cache = self._cache
+        hashes = rowcache.hash_rows(matrix)
+        rep = rowcache.first_occurrence(matrix, hashes)
+        uniq = np.flatnonzero(rep == np.arange(n))
+        found, vals = cache.lookup(matrix[uniq], hashes[uniq])
+        cache.hits += int(found.sum())
+        cache.misses += int(uniq.size - found.sum())
+        hit_rows = uniq[found]
+        perf[hit_rows] = vals[found, 0]
+        area[hit_rows] = vals[found, 1]
+        miss_rows = uniq[~found]
+        if miss_rows.size:
+            fp, fa = self._score_batch(batch.take(miss_rows))
+            perf[miss_rows] = fp
+            area[miss_rows] = fa
+            cache.insert(matrix[miss_rows], hashes[miss_rows],
+                         np.stack([fp, fa], axis=1))
+        if uniq.size != n:                  # copy duplicates from their rep
+            perf = perf[rep]
+            area = area[rep]
         return perf, area
 
     def score_one(self, cfg: AccelConfig) -> float:
@@ -261,7 +299,7 @@ class Evaluator:
         worker identity, or shard composition — i.e. **shard-safe**: two
         evaluator shards that score the same config produce the same key
         and the same value, so exports merge without conflicts."""
-        return dict(self._cache.data)
+        return self._cache.export_bytes()
 
     def cache_merge(self, exported: Dict[bytes, Tuple[float, float]]) -> int:
         """Fold a worker shard's `cache_export` into this evaluator.
@@ -269,15 +307,9 @@ class Evaluator:
         First-writer-wins per key; because keys are content-addressed and
         values deterministic, the merged cache *values* are invariant to
         merge order and shard count (only LRU recency differs).  Returns
-        the number of new entries."""
-        data = self._cache.data
-        new = 0
-        for k, v in exported.items():
-            if k not in data:
-                data[k] = (float(v[0]), float(v[1]))
-                new += 1
-        self._cache.trim()
-        return new
+        the number of new entries.  Does not touch the hit/miss counters
+        (merges are bookkeeping, not scoring)."""
+        return self._cache.merge_bytes(exported)
 
     # ---------------------------------------------------------------- stats
     @property
@@ -288,11 +320,17 @@ class Evaluator:
     def cache_misses(self) -> int:
         return self._cache.misses
 
+    @property
+    def cache_evictions(self) -> int:
+        return self._cache.evictions
+
     def stats(self) -> Dict[str, int]:
         return {"batches": self.n_batches, "scored": self.n_scored,
                 "cache_hits": self._cache.hits,
                 "cache_misses": self._cache.misses,
-                "cache_size": len(self._cache.data)}
+                "cache_evictions": self._cache.evictions,
+                "dedup_skipped": self.dedup_skipped,
+                "cache_size": len(self._cache)}
 
 
 class FunctionEvaluator:

@@ -266,6 +266,10 @@ class EvalParams:
     backend: str = "numpy"
     objective: Optional[Any] = None
     constraints: Tuple = ()
+    # design-space value domains ({field: (values...)}); lets every worker
+    # shard build its fused score tables domain-complete on first use
+    # instead of growing them lazily pool by pool
+    domains: Optional[Dict[str, Tuple[int, ...]]] = None
 
     def build(self) -> Evaluator:
         return Evaluator(self.stream, hw=self.hw,
@@ -274,7 +278,8 @@ class EvalParams:
                          area_budget=self.area_budget,
                          backend=self.backend,
                          objective=self.objective,
-                         constraints=self.constraints)
+                         constraints=self.constraints,
+                         domains=self.domains)
 
 
 def _search_app_task(payload: Dict[str, Any]) -> Dict[str, Any]:

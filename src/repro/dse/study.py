@@ -400,7 +400,9 @@ class Study:
                           area_budget=self._search_area_budget,
                           backend=self.backend,
                           objective=self._engine_objective(),
-                          constraints=tuple(self._extra))
+                          constraints=tuple(self._extra),
+                          domains={k: tuple(v) for k, v
+                                   in self.space.domains.items()})
 
     def _make_evaluator(self, spec: AppSpec) -> Evaluator:
         return self._eval_params(spec).build()
@@ -659,9 +661,15 @@ class Study:
         hits = sum(int(s.get("cache_hits", 0)) for s in per_app.values())
         misses = sum(int(s.get("cache_misses", 0))
                      for s in per_app.values())
+        evictions = sum(int(s.get("cache_evictions", 0))
+                        for s in per_app.values())
+        dedup = sum(int(s.get("dedup_skipped", 0))
+                    for s in per_app.values())
         obs.counter("evaluator.scored", scored)
         obs.counter("evaluator.cache_hits", hits)
         obs.counter("evaluator.cache_misses", misses)
+        obs.counter("evaluator.cache_evictions", evictions)
+        obs.counter("search.dedup_skipped", dedup)
         ex = getattr(self, "_run_executor", None)
         result.meta["telemetry"] = {
             "wall_seconds": float(wall),
@@ -669,6 +677,8 @@ class Study:
             "configs_per_second": (scored / wall if wall > 0 else 0.0),
             "cache_hits": hits,
             "cache_misses": misses,
+            "cache_evictions": evictions,
+            "dedup_skipped": dedup,
             "per_app": per_app,
             "executor": ({"workers": int(ex.workers),
                           "retry_rounds": int(ex.retry_rounds),

@@ -1,0 +1,287 @@
+"""Fused jax scorer for the Table-1 analytical cost model.
+
+`FusedJaxScorer` is the `backend="jax"` twin of
+`repro.core.costmodel.FusedStreamScorer`: the same hoisted per-(value,
+op) gather tables, uploaded to the device once per table build, consumed
+by ONE persistent jit-compiled function per (stream, hw, value-set).
+Per call the host does only the cheap LUT coding of the pool matrix;
+everything else — the Eq. (9)-(13) validity screen, the Eq. (1)-(8)
+latency tail, the area polynomial — runs device-side in a single fused
+XLA program, so pools stop round-tripping host<->device per round.
+
+Pool sizes are padded up to buckets (powers of two) so steady-state
+search rounds with ragged miss-set sizes reuse a handful of compiled
+programs instead of recompiling per shape; padded rows score as invalid
+and are sliced off.
+
+`gather_rows` is the Pallas tiled gather kernel for the `[U, O]` op-table
+contraction: `out[c, :] = table[idx[c], :]` as a one-hot gather-reduce,
+tiled over (pool, table) blocks.  On CPU CI it runs in interpret mode
+(`benchmarks/kernel_bench.py --smoke` covers it); on TPU/GPU hosts pass
+`interpret=False` for real lowering.  `FusedJaxScorer(use_pallas=True)`
+routes the validity-screen table gathers through it.
+
+Everything degrades gracefully: importing this module requires jax, and
+`repro.core.search.Evaluator` falls back to the reference path when the
+import fails.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.costmodel import (ConfigBatch, HardwareConstants, LoopOrder,
+                                  OpStream, _FAST_FIELDS, _fused_tables_for)
+from repro.core.costmodel import FusedStreamScorer as _NumpyScorer
+
+__all__ = ["FusedJaxScorer", "gather_rows"]
+
+_COL_FIELDS = ("loop_order", "pe_group", "mac_per_group", "bank_height",
+               "bank_width", "weight_banks_pg", "act_banks_pg")
+
+_MIN_BUCKET = 256
+
+
+def _bucket(n: int) -> int:
+    b = _MIN_BUCKET
+    while b < n:
+        b <<= 1
+    return b
+
+
+def gather_rows(table, idx, *, block_c: int = 128, block_u: int = 128,
+                interpret: bool = True):
+    """Pallas tiled gather: `out[c, :] = table[idx[c], :]`.
+
+    One-hot gather-reduce over (pool, table-row) tiles: each grid step
+    materializes the [block_c, block_u] one-hot mask against a 2D iota
+    (TPU needs >= 2D iota) and reduces the masked table block into the
+    output tile.  Exact for integer and float tables alike — each output
+    element is one table element plus zeros."""
+    from jax.experimental import pallas as pl
+
+    table = jnp.asarray(table)
+    idx = jnp.asarray(idx)
+    u, o = table.shape
+    n = idx.shape[0]
+    cp = ((n + block_c - 1) // block_c) * block_c
+    up = ((u + block_u - 1) // block_u) * block_u
+    idx_p = jnp.pad(idx, (0, cp - n))
+    tbl_p = jnp.pad(table, ((0, up - u), (0, 0)))
+
+    def kernel(idx_ref, tbl_ref, out_ref):
+        ut = pl.program_id(1)
+        local = idx_ref[:].astype(jnp.int32) - ut * block_u
+        onehot = (jax.lax.broadcasted_iota(jnp.int32, (block_c, block_u), 1)
+                  == local[:, None])
+        contrib = jnp.where(onehot[:, :, None], tbl_ref[:][None, :, :],
+                            jnp.zeros((), dtype=tbl_ref.dtype)).sum(axis=1)
+
+        @pl.when(ut == 0)
+        def _init():
+            out_ref[:] = contrib
+
+        @pl.when(ut != 0)
+        def _accum():
+            out_ref[:] = out_ref[:] + contrib
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(cp // block_c, up // block_u),
+        in_specs=[pl.BlockSpec((block_c,), lambda i, ut: (i,)),
+                  pl.BlockSpec((block_u, o), lambda i, ut: (ut, 0))],
+        out_specs=pl.BlockSpec((block_c, o), lambda i, ut: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((cp, o), table.dtype),
+        interpret=interpret,
+    )(idx_p, tbl_p)
+    return out[:n]
+
+
+class FusedJaxScorer:
+    """Device-resident fused (GOPS, area) scorer, `metrics()`-compatible
+    with `FusedStreamScorer` (parity <= 1e-6 on every zoo app, gated by
+    `benchmarks/evaluator_throughput.py --parity-zoo`)."""
+
+    def __init__(self, stream: OpStream, hw: HardwareConstants,
+                 peak_weight_bits: int = 0, peak_input_bits: int = 0,
+                 domains: Optional[Dict[str, Sequence[int]]] = None,
+                 use_pallas: bool = False, interpret: bool = True):
+        if not _NumpyScorer.supports(stream):
+            raise ValueError("stream not supported by the fused scorer; "
+                             "use performance_gops/area_many")
+        self.hw = hw
+        self.peak_weight_bits = int(peak_weight_bits)
+        self.peak_input_bits = int(peak_input_bits)
+        self.use_pallas = use_pallas
+        self.interpret = interpret
+        self.t = _fused_tables_for(stream, hw, domains)
+        self._dev: Optional[Dict[str, object]] = None
+        self._kern = None
+        self._built_rebuilds = -1
+        self.n_compiles = 0
+
+    # ---------------------------------------------------------- device prep
+    def _ensure_built(self) -> None:
+        """(Re)upload tables + rebuild the jitted function after a lazy
+        value-set growth rebuild of the shared numpy tables."""
+        if self._built_rebuilds == self.t.n_rebuilds:
+            return
+        t = self.t
+        self._dev = {name: jnp.asarray(getattr(t, name)) for name in
+                     ("pb_tbl", "ifp_tbl", "ofp_tbl", "xp_tbl", "yp_tbl",
+                      "kk_tbl", "win_x_tbl", "win_y_tbl", "wt_tbl",
+                      "spatial_tbl", "u1_tbl", "u2_tbl", "u3_tbl",
+                      "atile_tbl", "num_weight", "num_input", "ws_weight",
+                      "ie_batch", "is_input", "weight_elems", "repeat")}
+        # buffer donation is a no-op (with a warning) on the CPU backend;
+        # only request it where the runtime can actually honor it
+        donate = (0, 1) if jax.default_backend() != "cpu" else ()
+        self._kern = jax.jit(self._make_kernel(),
+                             donate_argnums=donate)
+        self._built_rebuilds = self.t.n_rebuilds
+        self.n_compiles += 1
+
+    def _make_kernel(self):
+        t, hw = self.t, self.hw
+        dev = self._dev
+        nv = dict(t.nvals)
+        expand = np.asarray(t.expand)
+        total_ops = float(t.total_ops)
+        max_batch = int(t.max_batch)
+        pw = self.peak_weight_bits
+        pi_scaled = self.peak_input_bits * max_batch
+        bit_width = int(hw.bit_width)
+        freq = float(hw.frequency_hz)
+        use_pallas, interpret = self.use_pallas, self.interpret
+
+        def take(tbl, idx):
+            if use_pallas and tbl.ndim == 2:
+                return gather_rows(tbl, idx, interpret=interpret)
+            return tbl[idx]
+
+        def kernel(codes, cols):
+            c = {f: codes[:, j] for j, f in enumerate(_FAST_FIELDS)}
+            k = {f: cols[:, j] for j, f in enumerate(_COL_FIELDS)}
+
+            pe_group = k["pe_group"]
+            total_macs = pe_group * k["mac_per_group"]
+            banks_w = k["weight_banks_pg"] * pe_group * k["bank_width"]
+            banks_a = k["act_banks_pg"] * pe_group * k["bank_width"]
+            wbuf = banks_w * k["bank_height"]
+            abuf = banks_a * k["bank_height"]
+            area = (total_macs * (hw.area_per_mac + hw.area_per_mac_regfile)
+                    + (wbuf + abuf) * hw.area_per_sram_bit
+                    + pe_group * hw.area_per_group_ctrl)
+
+            i_u1 = ((c["tif"] * nv["pif"] + c["pif"]) * nv["pkx"]
+                    + c["pkx"]) * nv["pky"] + c["pky"]
+            i_u2 = ((c["tix"] * nv["pox"] + c["pox"]) * nv["tiy"]
+                    + c["tiy"]) * nv["poy"] + c["poy"]
+            i_u3 = (c["tof"] * nv["pof"] + c["pof"]) * nv["pb"] + c["pb"]
+            i_wt = c["tif"] * nv["tof"] + c["tof"]
+            i_at = ((c["tix"] * nv["tiy"] + c["tiy"]) * nv["tif"]
+                    + c["tif"]) * nv["tof"] + c["tof"]
+
+            # Eq. (9)-(13): validity screen over the joint op tables — the
+            # [U, O] contraction the Pallas gather kernel serves
+            unroll = (take(dev["u1_tbl"], i_u1) * take(dev["u2_tbl"], i_u2)
+                      * take(dev["u3_tbl"], i_u3))
+            valid_ops = unroll <= total_macs[:, None]
+            valid_ops &= wbuf[:, None] >= take(dev["wt_tbl"][1], i_wt)
+            valid_ops &= abuf[:, None] >= take(dev["atile_tbl"], i_at)
+            valid = valid_ops.all(axis=1)
+            if pw:
+                valid &= wbuf >= pw
+            if pi_scaled:
+                valid &= abuf >= pi_scaled
+
+            # Eq. (1)-(8) latency tail (computed for every row; padding and
+            # invalid rows are masked out of the GOPS at the end)
+            g = dev["pb_tbl"][:, i_u3 % nv["pb"]]
+            # pb code is the trailing radix of i_u3; recover it directly
+            batch_iters, pb = g[0], g[1]
+            g = dev["ifp_tbl"][:, c["tif"] * nv["pif"] + c["pif"]]
+            cd_if, pif = g[0], g[1]
+            g = dev["ofp_tbl"][:, c["tof"] * nv["pof"] + c["pof"]]
+            cd_of, pof = g[0], g[1]
+            i_xp = c["tix"] * nv["pox"] + c["pox"]
+            g = dev["xp_tbl"][:, i_xp]
+            cd_ox, pox = g[0], g[1]
+            i_yp = c["tiy"] * nv["poy"] + c["poy"]
+            g = dev["yp_tbl"][:, i_yp]
+            cd_oy, poy = g[0], g[1]
+            g = dev["kk_tbl"][:, c["pkx"] * nv["pky"] + c["pky"]]
+            cd_kk, p_kxky = g[0], g[1]
+            gw = dev["wt_tbl"][:, i_wt]
+            chan_tiles, ofm_tiles = gw[0], gw[2]
+            spatial_tiles = dev["spatial_tbl"][c["tix"] * nv["tiy"]
+                                              + c["tiy"]]
+
+            inter = chan_tiles * spatial_tiles
+            inner = cd_if * cd_kk * cd_ox * cd_oy * cd_of
+            compute_cycles = inter * inner * batch_iters * dev["repeat"]
+
+            poxy = pox * poy
+            weight_reuse = poxy * pb                            # Eq. (1)
+            in_win = (dev["win_x_tbl"][i_xp * nv["pkx"] + c["pkx"]]
+                      * dev["win_y_tbl"][i_yp * nv["pky"] + c["pky"]])
+            input_reuse = jnp.maximum(
+                (pof * p_kxky * poxy) // jnp.maximum(in_win, 1),
+                1)                                              # Eq. (2)
+
+            lo = k["loop_order"][:, None]
+            ws_in = (dev["ie_batch"] * ofm_tiles).astype(jnp.float64)
+            osis_w = (dev["weight_elems"]
+                      * spatial_tiles).astype(jnp.float64)
+            num_weight_eff = jnp.where(
+                lo == int(LoopOrder.PAPER),
+                dev["num_weight"] / jnp.maximum(weight_reuse, 1),
+                jnp.where(lo == int(LoopOrder.WEIGHT_STATIONARY),
+                          dev["ws_weight"], osis_w))
+            num_input_eff = jnp.where(
+                lo == int(LoopOrder.PAPER),
+                dev["num_input"] / jnp.maximum(input_reuse, 1),
+                jnp.where(lo == int(LoopOrder.INPUT_STATIONARY),
+                          dev["is_input"], ws_in))
+
+            wbw = jnp.maximum(banks_w // bit_width, 1)[:, None]
+            abw = jnp.maximum(banks_a // bit_width, 1)[:, None]
+            weight_cycles = jnp.ceil(num_weight_eff / wbw)      # Eq. (7)
+            input_cycles = jnp.ceil(num_input_eff / abw)        # Eq. (8)
+            total = jnp.maximum(compute_cycles.astype(jnp.float64),
+                                jnp.maximum(weight_cycles, input_cycles))
+            cycles = total[:, expand].sum(axis=1)
+
+            seconds = cycles / freq
+            gops = jnp.where(valid & (cycles > 0),
+                             total_ops / jnp.maximum(seconds, 1e-30) / 1e9,
+                             0.0)
+            return gops, area.astype(jnp.float64)
+
+        return kernel
+
+    # -------------------------------------------------------------- scoring
+    def metrics(self, matrix: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        n = matrix.shape[0]
+        if n == 0:
+            z = np.zeros(0, dtype=np.float64)
+            return z, z.copy()
+        with jax.experimental.enable_x64():
+            code = self.t.codes(matrix)     # may grow/rebuild the tables
+            self._ensure_built()
+            m = _bucket(n)
+            codes = np.zeros((m, len(_FAST_FIELDS)), dtype=np.int64)
+            cols = np.zeros((m, len(_COL_FIELDS)), dtype=np.int64)
+            for j, f in enumerate(_FAST_FIELDS):
+                codes[:n, j] = code[f]
+            J = ConfigBatch._INDEX
+            for j, f in enumerate(_COL_FIELDS):
+                cols[:n, j] = matrix[:, J[f]]
+            gops, area = self._kern(codes, cols)
+            return (np.asarray(gops)[:n].astype(np.float64),
+                    np.asarray(area)[:n].astype(np.float64))

@@ -5,14 +5,17 @@ the journal makes "anytime curve" data a first-class byproduct of *every*
 search.  `run_search` emits one record per round::
 
     {"seq": 3, "kind": "round", "app": "resnet", "engine": "tpe",
-     "round": 4, "pool": 16, "n_scored": 64, "best": 1530.2,
-     "feasible_frac": 0.81, "hypervolume": 41234.5}
+     "round": 4, "pool": 16, "n_scored": 64, "dedup_skipped": 5,
+     "best": 1530.2, "feasible_frac": 0.81, "hypervolume": 41234.5}
 
 `best` is the incumbent scalar after the round (null until one exists),
-`feasible_frac` the fraction of the round's pool scoring > 0, and
-`hypervolume` the exact 2-D hypervolume of the (GOPS up, area down)
-front over everything journaled so far, referenced to the evaluator's
-area budget (null when the evaluator carries no area reading).
+`feasible_frac` the fraction of the round's pool scoring > 0,
+`dedup_skipped` how many of the round's proposals were already proposed
+in an earlier round of the same search (served from the evaluator's row
+cache, never re-scored), and `hypervolume` the exact 2-D hypervolume of
+the (GOPS up, area down) front over everything journaled so far,
+referenced to the evaluator's area budget (null when the evaluator
+carries no area reading).
 
 Records are picklable dicts; worker processes export their buffers and
 the parent merges them (`repro.dse.parallel`), so one Study yields one
@@ -49,6 +52,11 @@ def validate_record(rec: Dict[str, Any]) -> None:
     for k in ("round", "pool", "n_scored"):
         if not isinstance(rec[k], int) or rec[k] < 0:
             raise ValueError(f"bad {k} in journal record: {rec[k]!r}")
+    # optional (records from pre-dedup journals omit it)
+    if "dedup_skipped" in rec and (not isinstance(rec["dedup_skipped"], int)
+                                   or rec["dedup_skipped"] < 0):
+        raise ValueError(
+            f"bad dedup_skipped in journal record: {rec['dedup_skipped']!r}")
     for k in ("best", "feasible_frac", "hypervolume"):
         if rec[k] is not None and not isinstance(rec[k], (int, float)):
             raise ValueError(f"bad {k} in journal record: {rec[k]!r}")
