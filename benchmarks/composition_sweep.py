@@ -1,0 +1,198 @@
+"""Composition sweep: 2-engine prefill+decode vs the best monolithic.
+
+The CDAC-style case study behind the ROADMAP's heterogeneous-composition
+item: serve an LLM's prefill and decode phases — compute-bound and
+memory-bound, shaped differently — from one shared area budget, and ask
+whether two specialized sub-accelerators beat the single best monolithic
+design at *equal* area.
+
+Both sides play the same physical game (time-shared effective rates, see
+`repro.dse.composition`): the monolithic design is scored as the K=1
+composition — every workload time-shares the one engine — while the
+2-engine composition routes each phase to its own engine.  Both searches
+get the same engine, seed, and budget; the monolithic side's candidate
+search is the standard `Study` Pareto flow at the same area budget.
+
+Gates (`--check`, exit 2 on failure):
+
+  domination  — the K=2 composition found by `Study(composition=2)`
+                strictly dominates the best monolithic config on the
+                traffic mix at the shared budget: higher traffic score,
+                total area within the same budget.
+  determinism — composition StudyResult JSON byte-identical at
+                workers 1 vs 2.
+
+Results go to BENCH_composition.json (repo root; committed file is the
+CI baseline).
+
+Usage:
+  PYTHONPATH=src python benchmarks/composition_sweep.py            # full
+  PYTHONPATH=src python benchmarks/composition_sweep.py --smoke --check
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+import bench_io  # noqa: E402  (shared BENCH_*.json envelope I/O)
+
+ROOT = Path(__file__).resolve().parents[1]
+DEFAULT_OUT = ROOT / "BENCH_composition.json"
+DEFAULT_APPS = ["qwen2-0.5b:prefill", "qwen2-0.5b:decode"]
+
+
+def run_sweep(app_names, engine: str, budget, seed: int,
+              traffic=None, verbose: bool = True) -> dict:
+    from repro.core.multiapp import AppSpec
+    from repro.core.space import default_space
+    from repro.dse import Composition, CompositionEvaluator, Study
+
+    space = default_space()
+    area_budget = float(space.area_budget)
+    specs = [AppSpec.from_app(a) for a in app_names]
+
+    # --- K=2 composition study, workers 1 and 2 (determinism gate) ---
+    def comp_study(workers):
+        return Study(apps=list(app_names), composition=2, engine=engine,
+                     budget=budget, seed=seed, traffic=traffic,
+                     area_budgets=[area_budget], workers=workers,
+                     name="composition-sweep")
+
+    t0 = time.perf_counter()
+    comp_res = comp_study(1).run()
+    comp_seconds = time.perf_counter() - t0
+    comp_bytes = json.dumps(comp_res.to_json(), sort_keys=True)
+    par_bytes = json.dumps(comp_study(2).run().to_json(), sort_keys=True)
+    deterministic = comp_bytes == par_bytes
+
+    # --- monolithic baseline: standard Pareto study, same knobs ---
+    t0 = time.perf_counter()
+    mono_res = Study(apps=list(app_names), objective="pareto",
+                     engine=engine, budget=budget, seed=seed,
+                     area_budgets=[area_budget],
+                     name="composition-sweep-mono").run()
+    mono_seconds = time.perf_counter() - t0
+
+    # score the monolithic pick as the K=1 composition it physically is
+    # (every workload time-shares the one engine) — same scorer, same
+    # traffic mix, apples to apples
+    ev = CompositionEvaluator(specs, traffic=traffic,
+                              area_budget=area_budget)
+    mono_score, mono_area = 0.0, 0.0
+    if mono_res.best is not None:
+        mono_comp = Composition(
+            engines=(mono_res.best,),
+            assignment=tuple(0 for _ in app_names),
+            apps=tuple(app_names))
+        mono_score = ev.score_one(mono_comp)
+        mono_area = mono_comp.area(ev.hw)
+
+    comp = comp_res.best
+    comp_score = float(comp_res.best_score) if comp is not None else 0.0
+    comp_area = comp.area(ev.hw) if comp is not None else 0.0
+    dominates = bool(comp is not None
+                     and comp_area <= area_budget
+                     and comp_score > mono_score)
+
+    results = {
+        "apps": list(app_names),
+        "engine": engine,
+        "seed": seed,
+        "traffic": (dict(traffic) if traffic
+                    else {a: 1.0 / len(app_names) for a in app_names}),
+        "area_budget": area_budget,
+        "composition": {
+            "score": comp_score,
+            "area": comp_area,
+            "best": comp.to_json() if comp is not None else None,
+            "per_app_rates": (ev.per_app_rates(comp)
+                              if comp is not None else None),
+            "front_points": len(comp_res.front or []),
+            "seconds": comp_seconds,
+        },
+        "monolithic": {
+            "score": mono_score,
+            "area": mono_area,
+            "best": ({k: int(v) for k, v in mono_res.best.asdict().items()}
+                     if mono_res.best is not None else None),
+            "seconds": mono_seconds,
+        },
+        "advantage": (comp_score / mono_score if mono_score > 0 else None),
+        "dominates_monolithic": dominates,
+        "deterministic_workers_1v2": deterministic,
+    }
+    if verbose:
+        adv = results["advantage"]
+        print(f"[composition] K=2 score {comp_score:10.1f} "
+              f"(area {comp_area:8.0f})")
+        print(f"[composition] mono score {mono_score:10.1f} "
+              f"(area {mono_area:8.0f})")
+        print(f"[composition] advantage "
+              f"{adv:.2f}x" if adv else "[composition] advantage n/a",
+              f" dominates={dominates}  deterministic={deterministic}")
+    return results
+
+
+def check_gate(results: dict) -> None:
+    ok = True
+    if not results["deterministic_workers_1v2"]:
+        print("[check] FAIL: composition StudyResult differs at "
+              "workers 1 vs 2")
+        ok = False
+    else:
+        print("[check] determinism ok: byte-identical at workers 1 vs 2")
+    if not results["dominates_monolithic"]:
+        print(f"[check] FAIL: K=2 composition (score "
+              f"{results['composition']['score']:.1f}, area "
+              f"{results['composition']['area']:.0f}) does not strictly "
+              f"dominate the monolithic pick (score "
+              f"{results['monolithic']['score']:.1f}) at budget "
+              f"{results['area_budget']:g}")
+        ok = False
+    else:
+        print(f"[check] domination ok: {results['advantage']:.2f}x the "
+              "monolithic traffic score at equal area")
+    if not ok:
+        raise SystemExit(2)
+
+
+def main(argv=None) -> int:
+    from repro.dse import SearchBudget
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--apps", action="append", default=None,
+                    help=f"workloads to compose (repeatable)  [default: "
+                         f"{DEFAULT_APPS}]")
+    ap.add_argument("--engine", default="genetic")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale CI budget")
+    ap.add_argument("--out", type=Path, default=DEFAULT_OUT,
+                    help=f"JSON output path (default {DEFAULT_OUT})")
+    ap.add_argument("--check", action="store_true",
+                    help="gate: fail unless the K=2 composition strictly "
+                         "dominates the monolithic baseline and the "
+                         "composition study is worker-count invariant")
+    args = ap.parse_args(argv)
+
+    apps = list(args.apps or DEFAULT_APPS)
+    budget = (SearchBudget.smoke() if args.smoke
+              else SearchBudget(restarts=2, max_rounds=16,
+                                engine_kwargs={"population": 32,
+                                               "chains": 4, "batch": 32}))
+    results = run_sweep(apps, args.engine, budget, args.seed)
+    results["smoke"] = bool(args.smoke)
+    bench_io.write_results(args.out, "composition_sweep", results)
+    print(f"[composition] wrote {args.out}")
+    if args.check:
+        check_gate(results)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -13,7 +13,8 @@ analytical model with batch processing:
 
 Everything is vectorized over *operation streams* (struct-of-arrays) and,
 where needed, over *configurations* as well, so the multi-step greedy
-optimizer (core/greedy.py) can sweep thousands of candidate configurations
+optimizer (core/search/greedy.py) can sweep thousands of candidate
+configurations
 per second on CPU.
 
 Conventions:

@@ -14,8 +14,8 @@ tiled matmul kernel (kernels/matmul.py) with tiles (bm, bk, bn),
                                                               (Eqs. 10-13)
 
 and latency = max(compute, memory) exactly as in the paper.  The SAME
-multi-step greedy (core/greedy.py semantics, reimplemented over this tiny
-space exhaustively since it is enumerable) picks the tile shape.
+multi-step greedy (core/search/greedy.py semantics, reimplemented over this
+tiny space exhaustively since it is enumerable) picks the tile shape.
 """
 
 from __future__ import annotations

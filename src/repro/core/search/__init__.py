@@ -109,6 +109,10 @@ from repro.core.search.base import (DiscreteSpace, Optimizer, ParetoPoint,
                                     run_search, unpack_config)
 from repro.core.search.evaluator import (Evaluator, FunctionEvaluator,
                                          config_key)
+from repro.core.search.partition import (Partition, enumerate_assignments,
+                                         enumerate_partitions,
+                                         enumerate_splits, group_members,
+                                         tier_shares)
 from repro.core.search.rowcache import (RowHashCache, first_occurrence,
                                         hash_rows)
 from repro.core.search.greedy import GreedyOptimizer
@@ -125,6 +129,8 @@ __all__ = [
     "pack_config", "unpack_config",
     "Evaluator", "FunctionEvaluator", "config_key",
     "RowHashCache", "first_occurrence", "hash_rows",
+    "Partition", "enumerate_assignments", "enumerate_splits",
+    "enumerate_partitions", "tier_shares", "group_members",
     "GreedyOptimizer", "AnnealOptimizer", "GeneticOptimizer",
     "RandomSearchOptimizer", "TPEOptimizer", "NSGA2Optimizer",
     "ENGINES", "EngineSpec", "filter_kwargs", "make_engine",
@@ -235,8 +241,8 @@ def multi_step_greedy(
 ) -> SearchResult:
     """Algorithm 1, single start (paper §4.3).  `k` trades off optimality
     and per-round cost.  Formerly `repro.core.greedy.multi_step_greedy`
-    (that module is now a deprecated shim over this one); reproduces the
-    pre-refactor results bit-for-bit on a fixed seed."""
+    (that shim has since been removed); reproduces the pre-refactor
+    results bit-for-bit on a fixed seed."""
     evaluator = Evaluator.for_space(stream, space,
                                     peak_weight_bits=peak_weight_bits,
                                     peak_input_bits=peak_input_bits)

@@ -25,6 +25,8 @@ generic branch of `autotune_search`, and the examples are all thin
 compositions over `Study`.
 """
 
+from repro.dse.composition import (Composition, CompositionEvaluator,
+                                   TrafficMix, composition_score)
 from repro.dse.constraints import (AreaBudget, Constraint, PeakBuffers,
                                    UserConstraint, constraint_from_describe,
                                    feasible_mask_all)
@@ -43,6 +45,8 @@ __all__ = [
     "Constraint", "AreaBudget", "PeakBuffers", "UserConstraint",
     "feasible_mask_all", "constraint_from_describe",
     "Study", "StudyResult", "SearchBudget", "FrontPoint",
+    "Composition", "CompositionEvaluator", "TrafficMix",
+    "composition_score",
     "ParallelExecutor", "ParallelExecutionWarning", "FaultPlan",
     "EvalParams", "canonical_front_indices", "merge_pareto_fronts",
     "score_population_sharded",

@@ -84,6 +84,20 @@ def build_parser() -> argparse.ArgumentParser:
                     help="area budgets for the pareto sweep (repeatable; "
                          ">= 3 recommended)  [default: 0.75x/1x/1.25x the "
                          "area budget]")
+    ap.add_argument("--composition", type=int, default=1, metavar="K",
+                    help="search a K-sub-accelerator composition under one "
+                         "shared area budget (CDSE->CDAC; needs >= K apps "
+                         "and a pareto objective)  [default: 1 = one "
+                         "monolithic accelerator]")
+    ap.add_argument("--traffic", action="append", default=None,
+                    metavar="APP=WEIGHT",
+                    help="traffic weight per app for composition scoring "
+                         "(repeatable; normalized to sum 1)  [default: "
+                         "uniform]")
+    ap.add_argument("--split-grid", type=int, default=4, metavar="G",
+                    help="area-split granularity for compositions: each "
+                         "engine's budget share is a positive multiple of "
+                         "1/G  [default: 4]")
     ap.add_argument("--weight-peak-mode", default="streaming",
                     choices=("strict", "streaming"),
                     help="Eq. 11 weight-peak reading for every app incl. "
@@ -176,16 +190,29 @@ def study_from_cli(argv: Optional[List[str]] = None
         engine_kwargs=dict(base.engine_kwargs))
     budget.engine_kwargs.update(_parse_engine_kwargs(args.engine_kwarg))
 
+    traffic = None
+    if args.traffic:
+        traffic = {}
+        for pair in args.traffic:
+            key, sep, val = pair.partition("=")
+            if not sep:
+                raise SystemExit(
+                    f"--traffic wants APP=WEIGHT, got {pair!r}")
+            traffic[key] = float(val)
+
     # objective=None defers to Study's own default (maxperf for one app,
-    # geomean for several); --budgets flows through unconditionally so
-    # Study rejects it for non-pareto objectives instead of silent dropping
+    # geomean for several, pareto for compositions); --budgets flows
+    # through unconditionally so Study rejects it for non-pareto
+    # objectives instead of silent dropping
     study = Study(apps=apps, space=space, objective=args.objective,
                   constraints=constraints, engine=args.engine,
                   budget=budget, seed=args.seed, backend=args.backend,
                   top_frac=args.top_frac,
                   area_budgets=args.budgets,
                   weight_peak_mode=args.weight_peak_mode,
-                  name="cli", workers=args.workers)
+                  name="cli", workers=args.workers,
+                  composition=args.composition, traffic=traffic,
+                  split_grid=args.split_grid)
     return study, args
 
 
@@ -213,7 +240,18 @@ def _print_result(result: StudyResult) -> None:
             else:
                 print(f"  area<={b}: score={sel['score']:.2f} "
                       f"area={sel['area']:.0f}")
-    if result.best is not None and hasattr(result.best, "asdict"):
+    from repro.dse.composition import Composition
+    if isinstance(result.best, Composition):
+        comp = result.best
+        print(f"\nbest composition (score={result.best_score:.2f}, "
+              f"{comp.k} engines):")
+        keys = ("pe_group", "mac_per_group", "bank_height", "tif", "tof")
+        groups = comp.groups()
+        for g, eng in enumerate(comp.engines):
+            served = ",".join(comp.apps[i] for i in groups[g])
+            print(f"  engine {g} <- {served}:",
+                  {k: v for k, v in eng.asdict().items() if k in keys})
+    elif result.best is not None and hasattr(result.best, "asdict"):
         keys = ("pe_group", "mac_per_group", "bank_height", "tif", "tof")
         print(f"\nbest (score={result.best_score:.2f}):",
               {k: v for k, v in result.best.asdict().items() if k in keys})

@@ -244,7 +244,8 @@ class ParetoObjective(Objective):
         return {"name": self.name,
                 "terms": [t.label() for t in self.terms],
                 "method": self.method,
-                "weights": self.weights.tolist()}
+                "weights": self.weights.tolist(),
+                "rho": float(self.rho)}
 
     def __repr__(self) -> str:  # pragma: no cover
         return (f"ParetoObjective({[t.label() for t in self.terms]}, "
@@ -278,7 +279,8 @@ def make_objective(spec) -> Objective:
         if name == "pareto":
             return ParetoObjective(terms=spec.get("terms", ("perf", "-area")),
                                    method=spec.get("method", "chebyshev"),
-                                   weights=spec.get("weights"))
+                                   weights=spec.get("weights"),
+                                   rho=float(spec.get("rho", 0.05)))
         return OBJECTIVES[name]()
     if isinstance(spec, str):
         try:

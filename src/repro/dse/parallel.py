@@ -412,9 +412,16 @@ def merge_pareto_fronts(shard_fronts: Sequence[Sequence[Tuple[Any, float,
     one canonical representative), then swept with
     `canonical_front_indices`.  The output is sorted by ascending area —
     the same shape `pareto_front_indices` produces — so downstream
-    consumers (budget selections, plots) need no changes."""
+    consumers (budget selections, plots) need no changes.
+
+    Shards may be `None` or empty (an all-infeasible worker partition —
+    routine under composition sharding, where a tight area tier can zero
+    out every candidate a shard saw); they contribute nothing.  An input
+    of only such shards reduces to the empty front."""
     by_key: Dict[Tuple, Tuple[Any, float, float]] = {}
     for front in shard_fronts:
+        if front is None or len(front) == 0:
+            continue
         for cfg, perf, area in front:
             k = config_key(cfg)
             prev = by_key.get(k)

@@ -51,8 +51,14 @@ from repro.core.costmodel import (AccelConfig, ConfigBatch,
                                   area_many, performance_gops)
 from repro.core.multiapp import AppSpec, MultiAppResult
 from repro.core.search import (EngineSpec, Evaluator, SearchResult,
-                               optimize_for_app, pareto_front_indices)
+                               config_key, optimize_for_app,
+                               pareto_front_indices)
 from repro.core.space import DesignSpace, default_space
+from repro.core.search.partition import (enumerate_assignments,
+                                         enumerate_splits, group_members,
+                                         tier_shares)
+from repro.dse.composition import (Composition, CompositionEvaluator,
+                                   TrafficMix)
 from repro.dse.constraints import (AreaBudget, Constraint, PeakBuffers,
                                    constraint_from_describe,
                                    feasible_mask_all)
@@ -60,7 +66,8 @@ from repro.dse.objectives import (GeomeanAcrossApps, MaxPerf, Objective,
                                   ParetoObjective, geomean, make_objective)
 from repro.dse.parallel import (EvalParams, ParallelExecutor,
                                 canonical_front_indices, _cross_eval_task,
-                                _search_app_task, shard_rows)
+                                _search_app_task, merge_pareto_fronts,
+                                shard_rows)
 
 __all__ = ["SearchBudget", "Study", "StudyResult", "FrontPoint"]
 
@@ -111,6 +118,8 @@ class FrontPoint:
 def _cfg_dict(cfg: Any) -> Optional[Dict]:
     if cfg is None:
         return None
+    if isinstance(cfg, Composition):
+        return cfg.to_json()
     if isinstance(cfg, dict):
         return dict(cfg)
     if hasattr(cfg, "asdict"):
@@ -121,6 +130,8 @@ def _cfg_dict(cfg: Any) -> Optional[Dict]:
 def _cfg_load(d: Optional[Dict]) -> Any:
     if d is None:
         return None
+    if isinstance(d, dict) and d.get("kind") == "composition":
+        return Composition.from_json(d)
     try:
         return AccelConfig(**d)
     except TypeError:             # generic (non-accelerator) config
@@ -266,7 +277,10 @@ class Study:
                  weight_peak_mode: str = "streaming",
                  name: str = "study",
                  workers: int = 1,
-                 executor: Optional[ParallelExecutor] = None):
+                 executor: Optional[ParallelExecutor] = None,
+                 composition: int = 1,
+                 traffic: Optional[Dict[str, float]] = None,
+                 split_grid: int = 4):
         self.name = name
         self.engine = engine
         self.budget = SearchBudget.of(budget)
@@ -316,10 +330,43 @@ class Study:
                     "enforce them inside the supplied evaluator")
         self.space = space if space is not None else default_space()
 
+        # heterogeneous multi-accelerator composition (CDSE->CDAC): K > 1
+        # turns the problem into "K sub-accelerator configs + a traffic
+        # routing under one shared area budget"
+        self.composition = max(1, int(composition))
+        self.split_grid = int(split_grid)
+        self.traffic: Optional[TrafficMix] = None
+        if self.composition > 1:
+            if evaluator is not None:
+                raise ValueError("composition studies need application "
+                                 "mode (apps=...), not evaluator mode")
+            if self.composition > len(self.specs):
+                raise ValueError(
+                    f"composition={self.composition} engines need at least "
+                    f"as many apps (got {len(self.specs)}); every engine "
+                    f"must serve at least one workload")
+            if self.split_grid < self.composition:
+                raise ValueError(
+                    f"split_grid={self.split_grid} is too coarse for "
+                    f"{self.composition} engines")
+            if objective is None:
+                objective = ParetoObjective()
+            self.traffic = TrafficMix.of(traffic,
+                                         [s.name for s in self.specs])
+        elif traffic is not None:
+            raise ValueError("traffic= is only meaningful with "
+                             "composition > 1")
+
         if objective is None:
             objective = (GeomeanAcrossApps() if len(self.specs) > 1
                          else MaxPerf())
         self.objective = make_objective(objective)
+        if self.composition > 1 \
+                and not isinstance(self.objective, ParetoObjective):
+            raise ValueError(
+                "composition studies search the joint (traffic-perf, "
+                "total-area) trade-off and need a ParetoObjective "
+                f"(got {self.objective!r})")
 
         # split declared constraints into the evaluator-native pieces
         # (area budget, per-app peak floors) and injected extras
@@ -370,6 +417,18 @@ class Study:
             else dataclasses.replace(self.space,
                                      area_budget=self._search_area_budget))
 
+        # the search phase's job list.  Monolithic studies run one search
+        # per app (the historical contract, byte-identical).  Composition
+        # studies run the CDSE phase: one budgeted search per (app, area
+        # tier), where the tiers are every share a split can award one
+        # engine — the menus the CDAC synthesis composes from.
+        if self.composition > 1:
+            shares = tier_shares(self.composition, self.split_grid)
+            self._jobs: List[Tuple[int, float]] = [
+                (i, s) for i in range(len(self.specs)) for s in shares]
+        else:
+            self._jobs = [(i, 1.0) for i in range(len(self.specs))]
+
     # ----------------------------------------------------------- plumbing
     def _engine_objective(self) -> Optional[Objective]:
         """Objective injected into each per-app Evaluator.  `MaxPerf` and
@@ -391,21 +450,47 @@ class Study:
                     self._peak_override.input_bits)
         return spec.peak_weight_bits, spec.peak_input_bits
 
-    def _eval_params(self, spec: AppSpec) -> EvalParams:
+    def _eval_params(self, spec: AppSpec, share: float = 1.0) -> EvalParams:
         """Picklable recipe for this app's evaluator shard (each call deep-
-        copies any stateful objective, so shards never share state)."""
+        copies any stateful objective, so shards never share state).
+        `share` scales the search-phase area budget — the composition
+        CDSE tiers; 1.0 (the monolithic case) is exactly the historical
+        budget."""
         pw, pi = self._peaks_for(spec)
         return EvalParams(stream=spec.stream, hw=self.space.hw,
                           peak_weight_bits=pw, peak_input_bits=pi,
-                          area_budget=self._search_area_budget,
+                          area_budget=float(share)
+                          * self._search_area_budget,
                           backend=self.backend,
                           objective=self._engine_objective(),
                           constraints=tuple(self._extra),
                           domains={k: tuple(v) for k, v
                                    in self.space.domains.items()})
 
-    def _make_evaluator(self, spec: AppSpec) -> Evaluator:
-        return self._eval_params(spec).build()
+    def _make_evaluator(self, spec: AppSpec,
+                        share: float = 1.0) -> Evaluator:
+        return self._eval_params(spec, share).build()
+
+    # ------------------------------------------------------- job plumbing
+    # A "job" is one search-phase task: (spec_index, area-tier share).
+    # Monolithic studies have exactly one job per app at share 1.0, so
+    # every job-indexed code path below degenerates to the historical
+    # app-indexed one byte-for-byte.
+    def _job_label(self, j: int) -> str:
+        i, share = self._jobs[j]
+        name = self.specs[i].name
+        return name if self.composition <= 1 else f"{name}@{share:g}"
+
+    def _job_space(self, share: float) -> DesignSpace:
+        if share == 1.0:
+            return self._search_space
+        return dataclasses.replace(
+            self._search_space,
+            area_budget=float(share) * self._search_area_budget)
+
+    def _job_evaluator(self, j: int) -> Evaluator:
+        i, share = self._jobs[j]
+        return self._make_evaluator(self.specs[i], share)
 
     def _executor(self) -> ParallelExecutor:
         """One executor per `run()` (cached so retry/degradation counters
@@ -418,7 +503,7 @@ class Study:
     def _meta(self) -> Dict:
         eng = (self.engine if isinstance(self.engine, str)
                else getattr(self.engine, "__name__", str(self.engine)))
-        return {
+        meta = {
             "study": self.name,
             "apps": [s.name for s in self.specs],
             "engine": eng,
@@ -434,6 +519,13 @@ class Study:
             "backend": self.backend,
             "weight_peak_mode": self.weight_peak_mode,
         }
+        if self.composition > 1:
+            meta["composition"] = {
+                "k": self.composition,
+                "traffic": self.traffic.to_json(),
+                "split_grid": self.split_grid,
+            }
+        return meta
 
     # ---------------------------------------------------------------- run
     def run(self, checkpoint_path=None, checkpoint_every: int = 1,
@@ -467,11 +559,17 @@ class Study:
         self._run_stats: Dict[str, Dict[str, int]] = {}
         t0 = time.perf_counter()
         with obs.span("study", study=self.name, apps=len(self.specs)):
-            with obs.span("phase.search", apps=len(self.specs)):
-                per_app_results = self._run_app_searches(
+            with obs.span("phase.search", apps=len(self.specs),
+                          jobs=len(self._jobs)):
+                job_results = self._run_app_searches(
                     checkpoint_path, self._ckpt_every, on_checkpoint)
             with obs.span("phase.synthesize"):
-                result = self._synthesize(per_app_results)
+                if self.composition > 1:
+                    result = self._synthesize_composition(job_results)
+                else:
+                    result = self._synthesize(
+                        {self.specs[i].name: job_results[i]
+                         for i in range(len(self.specs))})
         if checkpoint_path is not None:
             Path(checkpoint_path).unlink(missing_ok=True)
         self._attach_telemetry(result, time.perf_counter() - t0)
@@ -479,40 +577,42 @@ class Study:
 
     # ----------------------------------------------- per-app search phase
     def _run_app_searches(self, checkpoint_path, checkpoint_every,
-                          on_checkpoint) -> Dict[str, SearchResult]:
+                          on_checkpoint) -> Dict[int, SearchResult]:
+        """Run every search-phase job; returns job-index -> SearchResult
+        (monolithic studies: job index == spec index)."""
         results: Dict[int, SearchResult] = dict(self._resume_state)
         self._resume_state = {}
-        todo = [i for i in range(len(self.specs)) if i not in results]
+        todo = [j for j in range(len(self._jobs)) if j not in results]
         if todo:
             if checkpoint_path is not None:
                 self._require_resumable()
             plan = self._chunk_plan(todo)
-            payloads = [self._task_payload(i, offset, length)
-                        for i, offset, length in plan]
+            payloads = [self._task_payload(j, offset, length)
+                        for j, offset, length in plan]
             chunks_of: Dict[int, int] = {}
-            for i, _, _ in plan:
-                chunks_of[i] = chunks_of.get(i, 0) + 1
+            for j, _, _ in plan:
+                chunks_of[j] = chunks_of.get(j, 0) + 1
             pending: Dict[int, Dict[int, Dict]] = {}
             state = {"since_ckpt": 0}
 
             def on_result(pos: int, rec: Dict) -> None:
-                i, offset, _ = plan[pos]
-                chunks = pending.setdefault(i, {})
+                j, offset, _ = plan[pos]
+                chunks = pending.setdefault(j, {})
                 chunks[offset] = rec
-                if len(chunks) < chunks_of[i]:
+                if len(chunks) < chunks_of[j]:
                     return            # more restart chunks still in flight
                 recs = [chunks[o] for o in sorted(chunks)]
-                del pending[i]
+                del pending[j]
                 whole = recs[0] if len(recs) == 1 \
                     else _combine_chunk_records(recs)
-                results[i] = self._rebuild_result(i, whole)
-                self._run_stats[self.specs[i].name] = dict(
+                results[j] = self._rebuild_result(j, whole)
+                self._run_stats[self._job_label(j)] = dict(
                     whole.get("stats") or {})
                 if checkpoint_path is None:
                     return
                 state["since_ckpt"] += 1
                 if (state["since_ckpt"] >= checkpoint_every
-                        or len(results) == len(self.specs)):
+                        or len(results) == len(self._jobs)):
                     state["since_ckpt"] = 0
                     self._write_checkpoint(checkpoint_path, results)
                     if on_checkpoint is not None:
@@ -524,8 +624,7 @@ class Study:
             # (never completion order) so merged buffers are reproducible
             for rec in outs:
                 obs.merge_worker(rec.get("obs"))
-        return {self.specs[i].name: results[i]
-                for i in range(len(self.specs))}
+        return results
 
     def _chunk_plan(self, todo: List[int]) -> List[Tuple[int, int, int]]:
         """(spec_index, restart_offset, n_restarts) tasks covering `todo`.
@@ -544,37 +643,38 @@ class Study:
                    else self.workers)
         if (restarts <= 1 or workers <= 1 or not todo
                 or "seed" in self.budget.engine_kwargs):
-            return [(i, 0, restarts) for i in todo]
-        per_app = min(restarts, max(1, -(-workers // len(todo))))
+            return [(j, 0, restarts) for j in todo]
+        per_job = min(restarts, max(1, -(-workers // len(todo))))
         plan: List[Tuple[int, int, int]] = []
-        for i in todo:
-            for part in np.array_split(np.arange(restarts), per_app):
+        for j in todo:
+            for part in np.array_split(np.arange(restarts), per_job):
                 if len(part):
-                    plan.append((i, int(part[0]), int(len(part))))
+                    plan.append((j, int(part[0]), int(len(part))))
         return plan
 
-    def _task_payload(self, i: int, offset: int = 0,
+    def _task_payload(self, j: int, offset: int = 0,
                       restarts: Optional[int] = None) -> Dict:
+        i, share = self._jobs[j]
         spec = self.specs[i]
-        return {"name": spec.name,
+        return {"name": self._job_label(j),
                 "spec_index": i,
-                "space": self._search_space,
+                "space": self._job_space(share),
                 "engine": self.engine,
                 "k": self.budget.k,
                 "restarts": (int(restarts) if restarts is not None
                              else self.budget.restarts),
                 "max_rounds": self.budget.max_rounds,
                 "engine_kwargs": dict(self.budget.engine_kwargs) or None,
-                "seed": self.seed + 7919 * i + 1000 * int(offset),
-                "params": self._eval_params(spec),
+                "seed": self.seed + 7919 * j + 1000 * int(offset),
+                "params": self._eval_params(spec, share),
                 "obs": obs.wire_state()}
 
-    def _rebuild_result(self, i: int, rec: Dict) -> SearchResult:
+    def _rebuild_result(self, j: int, rec: Dict) -> SearchResult:
         """Portable worker record -> SearchResult with a parent-side
         evaluator warmed from the worker shard's raw-metric cache (the
         synthesis stages re-read raw metrics; merged keys are content-
         addressed, so values are identical to an in-process run)."""
-        ev = self._make_evaluator(self.specs[i])
+        ev = self._job_evaluator(j)
         if rec.get("cache"):
             ev.cache_merge(rec["cache"])
         batch = rec.get("evaluated")
@@ -713,7 +813,7 @@ class Study:
 
     def _spec_record(self) -> Dict:
         """The full declarative problem (everything `from_spec` needs)."""
-        return {
+        rec = {
             "name": self.name,
             "apps": list(self._app_sources),
             "engine": self.engine,
@@ -732,6 +832,13 @@ class Study:
                       "area_budget": float(self.space.area_budget)},
             "workers": self.workers,
         }
+        if self.composition > 1:
+            rec["composition"] = {
+                "k": self.composition,
+                "traffic": self.traffic.to_json(),
+                "split_grid": self.split_grid,
+            }
+        return rec
 
     @classmethod
     def from_spec(cls, spec: Dict, *, workers: Optional[int] = None,
@@ -745,6 +852,7 @@ class Study:
                      for k, dom in sp["domains"].items()},
             hw=HardwareConstants(**sp["hw"]),
             area_budget=float(sp["area_budget"]))
+        comp = spec.get("composition") or {}
         return cls(
             apps=list(spec["apps"]), space=space,
             objective=make_objective(spec["objective"]),
@@ -759,7 +867,10 @@ class Study:
             name=spec["name"],
             workers=(workers if workers is not None
                      else int(spec.get("workers", 1))),
-            executor=executor)
+            executor=executor,
+            composition=int(comp.get("k", 1)),
+            traffic=comp.get("traffic"),
+            split_grid=int(comp.get("split_grid", 4)))
 
     def _encode_result(self, i: int, res: SearchResult) -> Dict:
         """One per-app SearchResult as a JSON fragment.  Configs are stored
@@ -768,7 +879,7 @@ class Study:
         synthesis inputs bit-for-bit."""
         codec = self._codec()
         return {
-            "name": self.specs[i].name,
+            "name": self._job_label(i),
             "best": _cfg_dict(res.best),
             "best_perf": float(res.best_perf),
             "engine": res.engine,
@@ -798,7 +909,7 @@ class Study:
             evaluated_perf=np.asarray(rec["evaluated_perf"],
                                       dtype=np.float64),
             rounds=int(rec["rounds"]), engine=rec.get("engine", ""),
-            evaluator=self._make_evaluator(self.specs[i]),
+            evaluator=self._job_evaluator(i),
             evaluated_values=(np.asarray(values, dtype=np.float64)
                               if values is not None else None))
 
@@ -1022,6 +1133,174 @@ class Study:
                             area=float(areas[i]),
                             per_app={a: float(cross[k, i])
                                      for k, a in enumerate(apps)})
+                 for i in front_idx]
+
+        selections: Dict[str, Optional[Dict]] = {}
+        best_pt: Optional[FrontPoint] = None
+        for b in self.area_budgets:
+            eligible = [p for p in front if p.area <= b and p.score > 0]
+            if not eligible:
+                selections[f"{b:g}"] = None
+                continue
+            pick = max(eligible, key=lambda p: p.score)
+            selections[f"{b:g}"] = pick.to_json()
+            if b <= self._area_budget and (best_pt is None
+                                           or pick.score > best_pt.score):
+                best_pt = pick
+        if best_pt is None and front:
+            best_pt = max(front, key=lambda p: p.score)
+
+        return StudyResult(
+            meta=self._meta(),
+            best=best_pt.config if best_pt else None,
+            best_score=float(best_pt.score) if best_pt else 0.0,
+            per_app=per_app, front=front, budget_selections=selections,
+            per_app_results=per_app_results)
+
+    # --------------------------- composition synthesis (the CDAC stage)
+    def _synthesize_composition(self, job_results: Dict[int, SearchResult]
+                                ) -> StudyResult:
+        """CHARM-style CDAC over the per-tier CDSE job results: build a
+        raw-metric engine menu per app, enumerate every canonical
+        (assignment, split) partition, pick each group's best engine
+        within its budget slice, then traffic-score the assembled
+        `Composition`s and sweep the joint (score, total-area) front.
+
+        Pure function of the job results plus declared knobs — the same
+        candidate order and tie-breaks regardless of worker count or
+        completion order, so composition StudyResults stay byte-identical
+        across `workers=N`."""
+        specs = self.specs
+        apps = [s.name for s in specs]
+        K = self.composition
+
+        per_app: Dict[str, Dict] = {}
+        for j in sorted(job_results):
+            res = job_results[j]
+            _, share = self._jobs[j]
+            per_app[self._job_label(j)] = {
+                "best": _cfg_dict(res.best),
+                # raw GOPS (tier incumbents are feasible under their tier
+                # budget, so the shard's masking never zeroes them)
+                "best_perf": (
+                    float(res.evaluator.score_with_area([res.best])[0][0])
+                    if res.best is not None else 0.0),
+                "best_scalarized": float(res.best_perf),
+                "n_evaluated": len(res.evaluated),
+                "rounds": int(res.rounds),
+                "area_share": float(share),
+            }
+        per_app_results = {self._job_label(j): job_results[j]
+                           for j in sorted(job_results)}
+
+        comp_ev = CompositionEvaluator(
+            specs, hw=self.space.hw, traffic=self.traffic,
+            area_budget=0.0, backend=self.backend,
+            constraints=tuple(self._extra),
+            domains={k: tuple(v) for k, v in self.space.domains.items()})
+        for j in sorted(job_results):
+            i, _ = self._jobs[j]
+            comp_ev.warm_from(specs[i].name,
+                              job_results[j].evaluator.cache_export())
+
+        # per-app engine menus: each area tier contributes its raw-metric
+        # non-dominated set (+ the tier incumbent); tiers merge per app.
+        # Metrics come from the budget-free shards, so one config never
+        # carries conflicting numbers across tiers, and an all-infeasible
+        # tier reduces to an empty shard front.
+        menus: Dict[int, List[Any]] = {}
+        for i, name in enumerate(apps):
+            shard = comp_ev.shards[name]
+            tier_fronts: List[List[Tuple[Any, float, float]]] = []
+            for j in sorted(job_results):
+                if self._jobs[j][0] != i:
+                    continue
+                res = job_results[j]
+                pool = list(res.evaluated)
+                if res.best is not None:
+                    pool.append(res.best)
+                if not pool:
+                    tier_fronts.append([])
+                    continue
+                perf, area = shard.score_with_area(pool)
+                keys = [config_key(c) for c in pool]
+                idx = canonical_front_indices(perf, area, keys)
+                tier_fronts.append(
+                    [(pool[t], float(perf[t]), float(area[t]))
+                     for t in idx[:self.max_candidates_per_app]])
+            merged = merge_pareto_fronts(tier_fronts)
+            menus[i] = [cfg for cfg, _, _
+                        in merged[:self.max_candidates_per_app]]
+
+        # global engine candidate pool, deduped by content in (app,
+        # front-position) order
+        seen = set()
+        cands: List[Any] = []
+        for i in range(len(apps)):
+            for cfg in menus[i]:
+                key = config_key(cfg)
+                if key not in seen:
+                    seen.add(key)
+                    cands.append(cfg)
+        if not cands:
+            return StudyResult(
+                meta=self._meta(), best=None, best_score=0.0,
+                per_app=per_app, front=[],
+                budget_selections={f"{b:g}": None
+                                   for b in self.area_budgets},
+                per_app_results=per_app_results)
+
+        cross, areas = comp_ev.app_matrix(cands)
+        ckeys = [config_key(c) for c in cands]
+        w = self.traffic.vector()
+
+        # CDAC enumeration: the total log-score decomposes per group
+        # (sum over members of w_a*(log f_a + log gops_a)), so under a
+        # given (assignment, split, budget) each group independently
+        # takes its best affordable engine — exact, not heuristic.
+        comps: Dict[Tuple, Composition] = {}
+        for assignment in enumerate_assignments(len(apps), K):
+            members = group_members(assignment, K)
+            glogs = np.full((K, len(cands)), -np.inf)
+            for g, mem in enumerate(members):
+                wg = float(sum(w[a] for a in mem))
+                ok = (cross[mem, :] > 0).all(axis=0)
+                vals = np.zeros(len(cands))
+                for a in mem:
+                    vals += w[a] * (np.log(w[a] / wg)
+                                    + np.log(np.maximum(cross[a], 1e-12)))
+                glogs[g] = np.where(ok, vals, -np.inf)
+            for split in enumerate_splits(K, self.split_grid):
+                for b in self.area_budgets:
+                    picks: Optional[List[int]] = []
+                    for g in range(K):
+                        cap = float(split[g]) * float(b)
+                        elig = np.flatnonzero((areas <= cap)
+                                              & np.isfinite(glogs[g]))
+                        if elig.size == 0:
+                            picks = None
+                            break
+                        picks.append(min(
+                            elig.tolist(),
+                            key=lambda c: (-glogs[g][c], areas[c],
+                                           ckeys[c])))
+                    if picks is None:
+                        continue
+                    comp = Composition(
+                        engines=tuple(cands[c] for c in picks),
+                        assignment=tuple(assignment),
+                        apps=tuple(apps), split=tuple(split))
+                    # same engines + routing from another split/budget is
+                    # the same physical design; first proposer wins
+                    comps.setdefault(comp.key(), comp)
+
+        ordered_keys = sorted(comps)
+        ordered = [comps[k] for k in ordered_keys]
+        scores, careas = comp_ev.score_with_area(ordered)
+        front_idx = canonical_front_indices(scores, careas, ordered_keys)
+        front = [FrontPoint(config=ordered[i], score=float(scores[i]),
+                            area=float(careas[i]),
+                            per_app=comp_ev.per_app_rates(ordered[i]))
                  for i in front_idx]
 
         selections: Dict[str, Optional[Dict]] = {}

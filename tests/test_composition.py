@@ -1,0 +1,335 @@
+"""Heterogeneous multi-accelerator composition (repro.dse.composition +
+repro.core.search.partition): partition combinatorics canonicality, the
+time-shared traffic scoring model against hand formulas, the memoizing
+`CompositionEvaluator` against the uncached reference path, and the
+end-to-end `Study(composition=K)` determinism contracts — worker-count
+byte-identity across all six engines, checkpoint/resume byte-identity,
+telemetry inertness, and empty-shard tolerance in the Pareto merge."""
+
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.costmodel import AccelConfig, HardwareConstants
+from repro.core.multiapp import AppSpec
+from repro.core.search import config_key
+from repro.core.search.partition import (Partition, enumerate_assignments,
+                                         enumerate_partitions,
+                                         enumerate_splits, group_members,
+                                         tier_shares)
+from repro.core.space import default_space
+from repro.dse import (Composition, CompositionEvaluator, SearchBudget,
+                       Study, TrafficMix, composition_score,
+                       merge_pareto_fronts)
+from repro.dse.composition import cross_gops, total_area
+
+HW = HardwareConstants()
+
+
+def _spec(name):
+    return AppSpec.from_app(name)
+
+
+def _cfg(**over):
+    return AccelConfig(**over)
+
+
+# ---------------------------------------------------------- combinatorics
+
+def test_assignments_are_canonical_and_complete():
+    """Restricted-growth strings, lexicographic, surjective: the Stirling
+    set S(n, k), each unordered partition exactly once."""
+    a32 = enumerate_assignments(3, 2)
+    assert a32 == [(0, 0, 1), (0, 1, 0), (0, 1, 1)]       # S(3,2) = 3
+    a42 = enumerate_assignments(4, 2)
+    assert len(a42) == 7                                   # S(4,2) = 7
+    assert a42 == sorted(a42)                              # lexicographic
+    for a in a42:
+        assert a[0] == 0                                   # canonical RGS
+        for i in range(1, len(a)):
+            assert a[i] <= max(a[:i]) + 1
+        assert sorted(set(a)) == [0, 1]                    # surjective
+    assert enumerate_assignments(2, 1) == [(0, 0)]
+    assert enumerate_assignments(4, 2, limit=3) == a42[:3]
+
+
+def test_assignments_reject_impossible_shapes():
+    with pytest.raises(ValueError, match="surjectively"):
+        enumerate_assignments(1, 2)
+    with pytest.raises(ValueError, match="k >= 1"):
+        enumerate_assignments(3, 0)
+
+
+def test_splits_cover_the_grid_exactly():
+    s24 = enumerate_splits(2, 4)
+    assert s24 == [(0.25, 0.75), (0.5, 0.5), (0.75, 0.25)]
+    s34 = enumerate_splits(3, 4)
+    assert len(s34) == 3                                   # C(3, 2) = 3
+    for s in s34:
+        assert all(x > 0 for x in s)
+        assert abs(sum(s) - 1.0) < 1e-12
+    assert enumerate_splits(2, 2) == [(0.5, 0.5)]
+    with pytest.raises(ValueError, match="too coarse"):
+        enumerate_splits(3, 2)
+    assert tier_shares(2, 4) == (0.25, 0.5, 0.75)
+    assert tier_shares(1, 4) == (1.0,)
+
+
+def test_partition_roundtrip_and_validation():
+    p = Partition(assignment=(0, 1, 0), split=(0.75, 0.25))
+    assert p.k == 2
+    assert p.groups() == [[0, 2], [1]]
+    assert Partition.from_json(p.to_json()) == p
+    with pytest.raises(ValueError, match="surjective"):
+        Partition(assignment=(0, 0), split=(0.5, 0.5))
+    with pytest.raises(ValueError, match="sum to 1"):
+        Partition(assignment=(0, 1), split=(0.5, 0.4))
+    everything = list(enumerate_partitions(3, 2, 4))
+    assert len(everything) == 3 * 3            # S(3,2) * C(3,1)
+
+
+# ------------------------------------------------------------ traffic mix
+
+def test_traffic_mix_normalizes_and_validates():
+    mix = TrafficMix.of({"a": 3, "b": 1}, ["a", "b"])
+    assert mix.weights == (0.75, 0.25)
+    assert TrafficMix.of(None, ["a", "b"]).weights == (0.5, 0.5)
+    assert abs(sum(TrafficMix.of(None, ["a", "b", "c"]).weights) - 1) == 0
+    with pytest.raises(ValueError, match="unknown"):
+        TrafficMix.of({"a": 1, "z": 1}, ["a", "b"])
+    with pytest.raises(ValueError, match="missing"):
+        TrafficMix.of({"a": 1}, ["a", "b"])
+    with pytest.raises(ValueError, match="positive"):
+        TrafficMix.of({"a": 1, "b": 0}, ["a", "b"])
+
+
+# ------------------------------------------------------- scoring vs hand
+
+def test_composition_score_matches_hand_formula():
+    """score = prod((f_a * gops_a) ** w_a) with f_a = w_a / group weight."""
+    w = np.array([0.75, 0.25])
+    # both apps on one engine: fractions 0.75 / 0.25
+    g = np.array([100.0, 200.0])
+    expect = (0.75 * 100.0) ** 0.75 * (0.25 * 200.0) ** 0.25
+    assert composition_score(w, [0, 0], g) == pytest.approx(expect, rel=1e-12)
+    # dedicated engines: fractions are 1, plain weighted geomean
+    expect2 = 100.0 ** 0.75 * 200.0 ** 0.25
+    assert composition_score(w, [0, 1], g) == pytest.approx(expect2,
+                                                            rel=1e-12)
+    # splitting always beats sharing the same engine configs
+    assert expect2 > expect
+    # any infeasible app zeroes the whole composition
+    assert composition_score(w, [0, 1], np.array([100.0, 0.0])) == 0.0
+
+
+def test_composition_content_identity_ignores_split():
+    e0, e1 = _cfg(tof=8), _cfg(tof=16)
+    a = Composition(engines=(e0, e1), assignment=(0, 1), apps=("x", "y"),
+                    split=(0.25, 0.75))
+    b = Composition(engines=(e0, e1), assignment=(0, 1), apps=("x", "y"),
+                    split=(0.5, 0.5))
+    assert a.key() == b.key()
+    rt = Composition.from_json(a.to_json())
+    assert rt == a
+    with pytest.raises(ValueError, match="every one"):
+        Composition(engines=(e0, e1), assignment=(0, 0), apps=("x", "y"))
+
+
+# ------------------------------------------------- CompositionEvaluator
+
+def test_app_matrix_matches_uncached_reference():
+    specs = [_spec("ptb"), _spec("wdl")]
+    ev = CompositionEvaluator(specs, hw=HW)
+    cands = [_cfg(), _cfg(tof=16), _cfg(mac_per_group=128)]
+    gops, area = ev.app_matrix(cands)
+    np.testing.assert_allclose(gops, cross_gops(specs, cands, HW))
+    np.testing.assert_allclose(area, total_area(cands, HW))
+    # memoized second pass is identical
+    gops2, area2 = ev.app_matrix(cands)
+    np.testing.assert_array_equal(gops, gops2)
+    assert ev.stats()["cache_hits"] > 0
+
+
+def test_score_with_area_applies_shared_budget():
+    specs = [_spec("ptb"), _spec("wdl")]
+    e0, e1 = _cfg(), _cfg(tof=16)
+    comp = Composition(engines=(e0, e1), assignment=(0, 1),
+                       apps=("ptb", "wdl"))
+    raw = CompositionEvaluator(specs, hw=HW)
+    scores, areas = raw.score_with_area([comp])
+    assert areas[0] == pytest.approx(e0.area(HW) + e1.area(HW))
+    # hand-check against the reference matrix + formula
+    g = cross_gops(specs, [e0, e1], HW)
+    expect = composition_score(np.array([0.5, 0.5]), (0, 1),
+                               np.array([g[0, 0], g[1, 1]]))
+    assert scores[0] == pytest.approx(expect, rel=1e-12)
+    # a budget below the total area zeroes the score, not the area
+    tight = CompositionEvaluator(specs, hw=HW, area_budget=areas[0] - 1)
+    s2, a2 = tight.score_with_area([comp])
+    assert s2[0] == 0.0 and a2[0] == areas[0]
+    # explain() agrees with the scorer bit-for-bit
+    assert raw.explain(comp).score == pytest.approx(float(scores[0]),
+                                                    rel=1e-12)
+
+
+def test_warm_from_reuses_search_caches():
+    from repro.core.search import Evaluator
+    spec = _spec("ptb")
+    search_ev = Evaluator(spec.stream, hw=HW,
+                          peak_weight_bits=spec.peak_weight_bits,
+                          peak_input_bits=spec.peak_input_bits,
+                          area_budget=0.0)
+    cands = [_cfg(), _cfg(tof=16)]
+    search_ev.score_with_area(cands)
+    comp_ev = CompositionEvaluator([spec], hw=HW)
+    merged = comp_ev.warm_from("ptb", search_ev.cache_export())
+    assert merged == len(cands)
+    comp_ev.app_matrix(cands)
+    assert comp_ev.stats()["cache_hits"] >= len(cands)
+
+
+# ---------------------------------------- satellite: empty-shard merging
+
+def test_merge_pareto_fronts_tolerates_empty_shards():
+    """All-infeasible shards (None or empty — routine for tight
+    composition area tiers) must contribute nothing, not crash."""
+    assert merge_pareto_fronts([]) == []
+    assert merge_pareto_fronts([[]]) == []
+    assert merge_pareto_fronts([[], []]) == []
+    assert merge_pareto_fronts([None, []]) == []
+    assert merge_pareto_fronts([None, np.array([])]) == []
+    real = [(_cfg(), 10.0, 100.0), (_cfg(tof=16), 20.0, 200.0)]
+    merged = merge_pareto_fronts([None, [], real, ()])
+    assert [(p, a) for _, p, a in merged] == [(10.0, 100.0), (20.0, 200.0)]
+    # zero-perf entries never enter the front
+    assert merge_pareto_fronts([[(_cfg(), 0.0, 100.0)]]) == []
+
+
+# ------------------------------------------- Study(composition=K) e2e
+
+COMP_KW = dict(apps=["ptb", "wdl"], composition=2, seed=0)
+
+ENGINE_BUDGETS = {
+    "greedy": SearchBudget(k=2, restarts=1, max_rounds=3),
+    "anneal": SearchBudget(restarts=1, max_rounds=3,
+                           engine_kwargs={"chains": 3}),
+    "genetic": SearchBudget(restarts=1, max_rounds=3,
+                            engine_kwargs={"population": 12}),
+    "random": SearchBudget(restarts=1, max_rounds=2,
+                           engine_kwargs={"batch": 12}),
+    "tpe": SearchBudget(restarts=1, max_rounds=3,
+                        engine_kwargs={"batch": 12, "startup_rounds": 1}),
+    "nsga2": SearchBudget(restarts=1, max_rounds=3,
+                          engine_kwargs={"population": 12}),
+}
+
+
+def result_bytes(result) -> str:
+    return json.dumps(result.to_json(), sort_keys=True)
+
+
+def test_study_validates_composition_args():
+    with pytest.raises(ValueError, match="at least"):
+        Study(apps=["ptb"], composition=2)
+    with pytest.raises(ValueError, match="too coarse"):
+        Study(apps=["ptb", "wdl"], composition=2, split_grid=1)
+    with pytest.raises(ValueError, match="ParetoObjective"):
+        Study(apps=["ptb", "wdl"], composition=2, objective="geomean")
+    with pytest.raises(ValueError, match="composition > 1"):
+        Study(apps=["ptb", "wdl"], traffic={"ptb": 1, "wdl": 1})
+
+
+def test_composition_study_end_to_end():
+    res = Study(engine="greedy", budget=ENGINE_BUDGETS["greedy"],
+                traffic={"ptb": 3, "wdl": 1}, **COMP_KW).run()
+    assert isinstance(res.best, Composition)
+    assert res.best.k == 2
+    assert res.best_score > 0
+    assert res.meta["composition"]["k"] == 2
+    assert res.meta["composition"]["traffic"] == {"ptb": 0.75, "wdl": 0.25}
+    # CDSE phase ran one job per (app, tier)
+    assert sorted(res.per_app) == ["ptb@0.25", "ptb@0.5", "ptb@0.75",
+                                   "wdl@0.25", "wdl@0.5", "wdl@0.75"]
+    # front points carry effective per-app rates whose weighted geomean
+    # is the reported score
+    for pt in res.front:
+        rates = [pt.per_app["ptb"], pt.per_app["wdl"]]
+        assert pt.score == pytest.approx(
+            rates[0] ** 0.75 * rates[1] ** 0.25, rel=1e-9)
+    # the selected best re-scores identically through a fresh evaluator
+    ev = CompositionEvaluator([_spec("ptb"), _spec("wdl")], hw=HW,
+                              traffic={"ptb": 3, "wdl": 1})
+    assert ev.score_one(res.best) == pytest.approx(res.best_score, rel=1e-12)
+    # persisted results round-trip the Composition
+    loaded = json.loads(result_bytes(res))
+    assert loaded["best"]["kind"] == "composition"
+
+
+@pytest.mark.parametrize("engine", sorted(ENGINE_BUDGETS))
+def test_worker_count_invariance_all_engines(engine):
+    """Composition StudyResult JSON is byte-identical at workers 1 vs 2
+    for every engine (the ISSUE's acceptance gate)."""
+    kw = dict(engine=engine, budget=ENGINE_BUDGETS[engine], **COMP_KW)
+    serial = result_bytes(Study(workers=1, **kw).run())
+    parallel = result_bytes(Study(workers=2, **kw).run())
+    assert serial == parallel
+
+
+def test_composition_resume_is_bit_identical(tmp_path):
+    kw = dict(engine="random", budget=ENGINE_BUDGETS["random"],
+              traffic={"ptb": 2, "wdl": 1}, **COMP_KW)
+    baseline = result_bytes(Study(**kw).run())
+
+    class Crash(Exception):
+        pass
+
+    for boundary in (1, 3, 5):
+        ckpt = tmp_path / f"comp.{boundary}.ckpt"
+
+        def boom(n, stop=boundary):
+            if n == stop:
+                raise Crash
+
+        with pytest.raises(Crash):
+            Study(**kw).run(checkpoint_path=ckpt, checkpoint_every=1,
+                            on_checkpoint=boom)
+        assert ckpt.exists()
+        frag = json.loads(ckpt.read_text())
+        assert frag["study"]["composition"]["k"] == 2
+        assert result_bytes(Study.resume(ckpt)) == baseline
+        assert not ckpt.exists()
+
+
+def test_composition_telemetry_is_result_inert():
+    kw = dict(engine="greedy", budget=ENGINE_BUDGETS["greedy"], **COMP_KW)
+    plain = result_bytes(Study(**kw).run())
+    obs.enable(trace=True, metrics=True, journal=True)
+    try:
+        traced = Study(**kw).run()
+    finally:
+        obs.disable(reset=True)
+    assert "telemetry" in traced.meta
+    assert result_bytes(traced) == plain
+
+
+def test_composition_beats_sharing_on_heterogeneous_traffic():
+    """The physical claim behind the benchmark gate, in miniature: routing
+    two differently-shaped workloads to dedicated engines scores at least
+    as well as any single shared engine of the same candidate set."""
+    specs = [_spec("ptb"), _spec("wdl")]
+    ev = CompositionEvaluator(specs, hw=HW)
+    cands = [_cfg(), _cfg(tof=16), _cfg(mac_per_group=128)]
+    gops, _ = ev.app_matrix(cands)
+    w = np.array([0.5, 0.5])
+    best_mono = max(composition_score(w, (0, 0), gops[:, [c, c]].diagonal())
+                    for c in range(len(cands)))
+    best_duo = max(
+        composition_score(w, (0, 1),
+                          np.array([gops[0, c0], gops[1, c1]]))
+        for c0 in range(len(cands)) for c1 in range(len(cands)))
+    # a 50/50 mono pays the prod(f_a^w_a) = 0.5 sharing factor the duo
+    # avoids, so the duo wins by at least 2x on the same candidate set
+    assert best_duo >= best_mono * 2 * (1 - 1e-12)

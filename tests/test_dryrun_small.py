@@ -18,7 +18,7 @@ import pytest
 SRC = str(Path(__file__).resolve().parents[1] / "src")
 
 # jax API drift guard (precise, per the ROADMAP re-validation note):
-# last re-validated against jax 0.4.37 (2026-08-08, fused hot-path PR) —
+# last re-validated against jax 0.4.37 (2026-08-08, composition PR) —
 # both the train and decode dry-runs compile on the forced-host mesh and
 # report nonzero flops/hbm/collectives.  The mesh AxisType guard in launch/mesh.py covers
 # the 0.5+ Mesh signature, so the known-good window is [MIN, MAX); bump

@@ -1,38 +1,11 @@
 """Multi-step greedy optimizer (Algorithm 1)."""
 
-import importlib
-import sys
-import warnings
-
 import numpy as np
-import pytest
 
 from repro.core import apps
 from repro.core.multiapp import AppSpec
 from repro.core.search import multi_step_greedy, optimize_for_app
 from repro.core.space import default_space
-
-
-def test_legacy_greedy_shim_warns_and_matches():
-    """`repro.core.greedy` is a deprecated shim: importing it emits a
-    DeprecationWarning (not an error) and its surface re-exports the
-    search-subsystem implementation unchanged."""
-    sys.modules.pop("repro.core.greedy", None)
-    with pytest.warns(DeprecationWarning, match="repro.core.greedy"):
-        legacy = importlib.import_module("repro.core.greedy")
-    assert legacy.multi_step_greedy is multi_step_greedy
-    from repro.core.search import SearchResult
-    assert legacy.GreedyResult is SearchResult
-    spec = _spec("wdl")
-    space = default_space()
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        a = legacy.optimize_for_app(spec.stream, space, k=2, restarts=1,
-                                    seed=5, max_rounds=3)
-    b = optimize_for_app(spec.stream, space, k=2, restarts=1, seed=5,
-                         max_rounds=3, engine="greedy")
-    assert a.best_perf == b.best_perf
-    assert a.best.asdict() == b.best.asdict()
 
 
 def _spec(name="resnet"):

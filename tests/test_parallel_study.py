@@ -99,6 +99,37 @@ def test_resume_under_parallel_workers(tmp_path):
     assert result_bytes(Study.resume(ckpt, workers=1)) == baseline
 
 
+def test_resume_roundtrips_customized_vector_objective(tmp_path):
+    """A checkpoint holding a `ParetoObjective` with non-default
+    scalarizer kwargs (method, weights, rho) must rebuild the *same*
+    objective — the full `describe()` spec round-trips, not just the
+    defaults — and resume to a byte-identical result."""
+    obj = ParetoObjective(method="hypervolume", weights=[2.0, 1.0],
+                          rho=0.2)
+    kw = dict(apps=["ptb", "wdl"], engine="genetic", objective=obj,
+              budget=SearchBudget(restarts=1, max_rounds=4,
+                                  engine_kwargs={"population": 12}),
+              seed=0)
+    baseline = result_bytes(Study(**kw).run())
+    spec = obj.describe()
+    assert spec == {"name": "pareto", "terms": ["perf", "-area"],
+                    "method": "hypervolume", "weights": [2.0, 1.0],
+                    "rho": 0.2}
+    ckpt = tmp_path / "vec.ckpt"
+
+    def boom(n):
+        if n == 1:
+            raise Crash
+
+    with pytest.raises(Crash):
+        Study(**kw).run(checkpoint_path=ckpt, checkpoint_every=1,
+                        on_checkpoint=boom)
+    assert json.loads(ckpt.read_text())["study"]["objective"] == spec
+    resumed = Study.resume(ckpt)
+    assert resumed.meta["objective"] == spec
+    assert result_bytes(resumed) == baseline
+
+
 def test_checkpoint_requires_rebuildable_spec(tmp_path):
     """AppSpec objects / engine factories cannot round-trip through JSON:
     checkpointing fails fast, before any search runs."""
